@@ -1,0 +1,227 @@
+"""Benchmark harness (deliverable d): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig8   — per-image STD latency vs image size, ResNet-50 & VGG-16
+  fig9   — serving TPS, sequential vs C4-pipelined (+ derived OpEx ratio)
+  tableIV— kernel VMEM utilization from BlockSpec math (resource table)
+  tableV — conv engine GOPS: Winograd vs direct, measured + TPU-derived
+  tableVI— precision: FP32 reference vs FP16-storage BFP (wide/narrow
+           accumulator), f-measure + numeric deltas
+  microcode — versatility cost: config-RAM bytes per architecture
+
+Run:  PYTHONPATH=src python -m benchmarks.run [fig8 fig9 ...]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_call(fn, *args, repeat=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6        # us
+
+
+def bench_fig8_latency():
+    """Paper Fig. 8: latency vs image size for both extractors (reduced
+    width on CPU; the relative size scaling is the measurement)."""
+    from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
+
+    rows = []
+    for backbone in ("resnet50", "vgg16"):
+        for size in (64, 128, 256):
+            cfg = STDConfig(backbone=backbone, width=0.125,
+                            image_size=(size, size), merge_ch=(16, 16, 8),
+                            mode="optimized", storage_fp16=False)
+            m = PixelLinkModel(cfg)
+            params = m.init_params(jax.random.PRNGKey(0))
+            x = jnp.zeros((1, size, size, 3))
+            apply = jax.jit(lambda p, im: m.apply(p, im)["score"])
+            us = _time_call(apply, params, x)
+            name = f"fig8_latency_{backbone}_{size}x{size}"
+            rows.append((name, us, f"{us/1e3:.1f}ms/img"))
+            print(f"{name},{us:.0f},{us/1e3:.2f}ms")
+    return rows
+
+
+def bench_fig9_tps():
+    """Paper Fig. 9a: TPS sequential vs pipelined + OpEx ratio analogue."""
+    from repro.data.images import SyntheticSTDData
+    from repro.launch.serve import STDService
+
+    svc = STDService(width=0.125, buckets=(64, 96, 128))
+    rng = np.random.default_rng(0)
+    images = [
+        SyntheticSTDData(
+            (int(rng.integers(6, 14)) * 8, int(rng.integers(6, 14)) * 8),
+            seed=i,
+        ).sample(0, 1)["images"][0]
+        for i in range(10)
+    ]
+    for img in images:                       # warm (compiles buckets)
+        svc(img)
+    t0 = time.perf_counter()
+    for img in images:
+        svc(img)
+    seq_tps = len(images) / (time.perf_counter() - t0)
+    svc.serve_pipelined(images)
+    pipe_tps = svc.stats["pipelined_tps"]
+    print(f"fig9_tps_sequential,{1e6/seq_tps:.0f},{seq_tps:.2f}tps")
+    print(f"fig9_tps_pipelined,{1e6/pipe_tps:.0f},{pipe_tps:.2f}tps")
+    # OpEx = TCO / throughput: at fixed TCO the pipelining speedup IS the
+    # OpEx reduction (the paper's 46% combines this with the TCO ratio)
+    opex_gain = 1 - seq_tps / max(pipe_tps, 1e-9)
+    print(f"fig9_opex_reduction_from_pipelining,0,{opex_gain*100:.0f}%")
+    return seq_tps, pipe_tps
+
+
+def bench_tableIV_vmem():
+    """Paper Table IV analogue: per-kernel VMEM budget from BlockSpecs
+    (the resource-utilization table; v5e-class core ~ 128 MiB VMEM)."""
+    VMEM = 128 * 2**20
+    rows = [
+        ("bfp_matmul_bm256_bn256_bk512",
+         2 * (256 * 512 + 512 * 256 + 256 * 16 + 256 * 16)
+         + 256 * 256 * 4),
+        ("winograd_bp128_bn128_bk128",
+         2 * (128 * 36 * 128 * 4 + 36 * 128 * 128 * 4)
+         + 36 * 128 * 128 * 4 + 128 * 16 * 128 * 4),
+        ("flash_attn_bq512_bk512_d128",
+         2 * (512 * 128 * 4 * 3) + 512 * 128 * 4 + 2 * 512 * 4),
+        ("ssd_chunk_Lc128_N128_P64",
+         2 * (2 * 128 * 128 * 4 + 128 * 64 * 4 + 128 * 4)
+         + 128 * 64 * 4 + 64 * 128 * 4),
+    ]
+    for name, b in rows:
+        print(f"tableIV_vmem_{name},0,{b/2**20:.1f}MiB({100*b/VMEM:.0f}%)")
+    return rows
+
+
+def bench_tableV_gops():
+    """Paper Table V: conv engine throughput, Winograd vs direct.
+
+    Measured: pure-jnp Winograd vs lax direct conv wall time on CPU.
+    Derived: the 4x multiply reduction and the TPU-side verdict (DESIGN.md
+    §2: on the MXU the win is bounded by the transforms' bandwidth)."""
+    from repro.core import winograd as wg
+    from repro.kernels.winograd_conv.ref import direct_conv2d
+
+    n, h, w, cin, cout = 1, 128, 128, 64, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, cin))
+    k = jax.random.normal(jax.random.PRNGKey(1), (3, 3, cin, cout))
+    flops = 2 * n * h * w * 9 * cin * cout
+    f_dir = jax.jit(direct_conv2d)
+    f_win = jax.jit(wg.winograd_conv2d)
+    us_d = _time_call(f_dir, x, k)
+    us_w = _time_call(f_win, x, k)
+    print(f"tableV_direct_conv,{us_d:.0f},{flops/us_d/1e3:.1f}GOPS")
+    print(f"tableV_winograd_conv,{us_w:.0f},{flops/us_w/1e3:.1f}GOPS")
+    c = wg.multiply_count(h, w, cin, cout)
+    print(f"tableV_mac_reduction,0,{c['mac_reduction']:.2f}x")
+    return us_d, us_w
+
+
+def bench_tableVI_precision():
+    """Paper Table VI: precision deltas under BFP numerics.  FP32 engine
+    output is the 'GPU' reference; FP16-storage + BFP MAC is the 'FPGA'
+    side; the narrow accumulator shows what §IV.C maintenance saves."""
+    from repro.core import BFPConfig
+    from repro.data.images import SyntheticSTDData
+    from repro.models.fcn import postprocess as pp
+    from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
+
+    base = dict(backbone="vgg16", width=0.25, image_size=(96, 96),
+                merge_ch=(16, 16, 8))
+    m_ref = PixelLinkModel(STDConfig(mode="reference", storage_fp16=False,
+                                     **base))
+    params = m_ref.init_params(jax.random.PRNGKey(0))
+    data = SyntheticSTDData((96, 96), seed=3).sample(0, 4)
+    x = jnp.asarray(data["images"])
+    out_ref = m_ref.apply(params, x)
+
+    def run_bfp(mantissa_bits, wide):
+        cfg = STDConfig(
+            mode="reference", storage_fp16=True,
+            bfp=BFPConfig(mantissa_bits=mantissa_bits, wide_accum=wide),
+            **base,
+        )
+        m = PixelLinkModel(cfg)
+        return m.apply(m.normalize_weights(params), x)
+
+    def boxes(out, i):
+        lab = pp.cc_label(out["score"][i].astype(jnp.float32),
+                          out["links"][i].astype(jnp.float32),
+                          score_thr=0.55)
+        return pp.boxes_from_labels(np.asarray(lab), min_area=2)
+
+    for tag, mb, wide in (("bfp10_wide", 10, True),
+                          ("bfp10_narrow", 10, False),
+                          ("bfp7_wide", 7, True)):
+        t0 = time.perf_counter()
+        out = run_bfp(mb, wide)
+        us = (time.perf_counter() - t0) * 1e6
+        derr = float(jnp.mean(jnp.abs(
+            out["score"].astype(jnp.float32) - out_ref["score"])))
+        fms = []
+        for i in range(x.shape[0]):
+            ref_boxes = [b["box"] for b in boxes(out_ref, i)]
+            got = boxes(out, i)
+            fms.append(pp.f_measure(got, ref_boxes)["f_measure"]
+                       if ref_boxes else 1.0)
+        print(f"tableVI_{tag},{us:.0f},score_mae={derr:.4f}"
+              f";f_measure_vs_fp32={np.mean(fms):.4f}")
+    return True
+
+
+def bench_microcode():
+    """Versatility cost: one engine, every arch — config RAM per model."""
+    from repro.configs import ARCH_IDS, get_smoke_config
+    from repro.core.microcode import pack_program
+    from repro.models.lm import LMModel
+
+    for arch in ARCH_IDS:
+        model = LMModel(get_smoke_config(arch))
+        total = len(model.block.words)
+        extra = ""
+        if hasattr(model, "shared"):
+            total += len(model.shared.words)
+            extra = "+shared"
+        if hasattr(model, "enc_block"):
+            total += len(model.enc_block.words)
+            extra = "+enc"
+        print(f"microcode_{arch},0,{total}words{extra}/{total*32}B")
+    return True
+
+
+BENCHES = {
+    "fig8": bench_fig8_latency,
+    "fig9": bench_fig9_tps,
+    "tableIV": bench_tableIV_vmem,
+    "tableV": bench_tableV_gops,
+    "tableVI": bench_tableVI_precision,
+    "microcode": bench_microcode,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: the paper's full loop in miniature, on CPU, in ~a minute.
+
+1. Assemble a PixelLink STD model (VGG backbone) to MICROCODE — the
+   paper's Fig. 4 auto-configuration flow — and disassemble it.
+2. Normalize weights (BN fold + BFP, Fig. 4 right branch).
+3. Run inference in reference and optimized (Winograd + fused-upsample)
+   modes and check they agree.
+4. Decode text boxes via connected components (no box regression).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BFPConfig
+from repro.data.images import SyntheticSTDData
+from repro.models.fcn import PixelLinkModel, postprocess
+from repro.models.fcn.pixellink import STDConfig
+
+
+def main():
+    cfg = STDConfig(
+        backbone="vgg16", width=0.25, image_size=(96, 96),
+        merge_ch=(16, 16, 8), mode="optimized",
+        bfp=BFPConfig(mantissa_bits=10), storage_fp16=False,
+    )
+    model = PixelLinkModel(cfg)
+    print("=== microcode program (first 12 words) ===")
+    print("\n".join(model.program.disassemble().splitlines()[:12]))
+    print(f"... {len(model.program.words)} words total, "
+          f"{model.microcode_bytes().nbytes} bytes of config RAM, "
+          f"arena {model.program.arena_bytes/1024:.0f} KiB")
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    params_n = model.normalize_weights(params)     # BN fold + BFP normalize
+
+    data = SyntheticSTDData((96, 96), seed=42).sample(0, 1)
+    x = jnp.asarray(data["images"])
+    out = model.apply(params_n, x)
+    print(f"score map {out['score'].shape}, links {out['links'].shape}")
+
+    ref = PixelLinkModel(STDConfig(
+        backbone="vgg16", width=0.25, image_size=(96, 96),
+        merge_ch=(16, 16, 8), mode="reference", storage_fp16=False,
+    ))
+    out_ref = ref.apply(params, x)
+    diff = float(jnp.max(jnp.abs(out["score"] - out_ref["score"])))
+    print(f"optimized+BFP vs reference score max diff: {diff:.4f}")
+
+    labels = postprocess.cc_label(out["score"][0], out["links"][0],
+                                  score_thr=0.6)
+    boxes = postprocess.boxes_from_labels(np.asarray(labels), min_area=2)
+    print(f"{len(boxes)} text boxes detected (untrained net — structure "
+          f"only): {[b['box'] for b in boxes][:4]}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

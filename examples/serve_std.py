@@ -1,0 +1,15 @@
+"""Serve scene-text detection with batched random-size requests — the
+paper's deployment scenario (Fig. 2), including the §IV.B random-size
+path (bucketing + transpose trick) and C4 module-level pipelining.
+
+Run:  PYTHONPATH=src python examples/serve_std.py --requests 12
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

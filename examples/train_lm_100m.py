@@ -1,0 +1,108 @@
+"""End-to-end LM pretraining driver: a ~100M-param llama-family model for
+a few hundred steps on the synthetic repeat-copy stream, with the full
+production substrate: deterministic step-indexed data, AdamW (+optional
+BFP8 first moments), grad clipping + accumulation, async checkpointing,
+watchdog, and bit-exact mid-run crash-resume (exercised live).
+
+Run:  PYTHONPATH=src python examples/train_lm_100m.py --steps 200
+"""
+import argparse
+import os
+import shutil
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import TokenDataset
+from repro.models.lm import LMModel, cross_entropy
+from repro.optim import adamw, clip_by_global_norm, cosine_with_warmup
+from repro.runtime.fault_tolerance import TrainRunner, Watchdog
+
+# ~100M params: 12L x 768 (GPT-2-small class), llama-style blocks
+CFG_100M = ArchConfig(
+    name="llama-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab=4096,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="inject a crash at this step to demo resume")
+    args = ap.parse_args(argv)
+
+    model = LMModel(CFG_100M)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        model.init_params(jax.random.PRNGKey(0))))
+    print(f"[lm100m] {n_params/1e6:.1f}M params")
+
+    ds = TokenDataset(CFG_100M.vocab, args.seq, args.batch, seed=0)
+    opt_init, opt_update = adamw(
+        cosine_with_warmup(args.lr, 20, args.steps),
+        moment_dtype=args.moment_dtype, weight_decay=0.01,
+    )
+
+    @jax.jit
+    def step_fn(state, batch):
+        params, opt = state
+        def L(p):
+            logits = model.forward(p, batch["tokens"], mode="train")
+            return cross_entropy(logits, batch["labels"])
+        loss, g = jax.value_and_grad(L)(params)
+        g, gnorm = clip_by_global_norm(g, 1.0)
+        params, opt = opt_update(g, opt, params)
+        return (params, opt), {"loss": loss, "grad_norm": gnorm}
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = (params, opt_init(params))
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    cm = CheckpointManager(args.ckpt_dir, keep=2)
+    runner = TrainRunner(
+        step_fn, lambda s: jax.tree_util.tree_map(jnp.asarray, ds.batch(s)),
+        cm, ckpt_every=50, watchdog=Watchdog(),
+    )
+
+    t0 = time.time()
+    try:
+        step, state, status = runner.run(
+            state, 0, args.steps,
+            fail_at=args.crash_at or None,
+        )
+    except RuntimeError as e:
+        print(f"[lm100m] {e} — resuming from latest checkpoint")
+        runner2 = TrainRunner(
+            step_fn,
+            lambda s: jax.tree_util.tree_map(jnp.asarray, ds.batch(s)),
+            CheckpointManager(args.ckpt_dir, keep=2), ckpt_every=50,
+        )
+        start, state = runner2.resume_or_init(state)
+        step, state, status = runner2.run(state, start, args.steps - start)
+        runner.metrics_log += runner2.metrics_log
+
+    logs = runner.metrics_log
+    first = np.mean([m["loss"] for m in logs[:10]])
+    last = np.mean([m["loss"] for m in logs[-10:]])
+    for m in logs[:: max(len(logs) // 10, 1)]:
+        print(f"[lm100m] step {int(m['step']):4d} loss {m['loss']:.4f}")
+    print(f"[lm100m] loss {first:.3f} -> {last:.3f} in {time.time()-t0:.0f}s "
+          f"({status})")
+    assert last < first - 0.5, "model must learn the repeat-copy structure"
+    print("train_lm_100m OK")
+
+
+if __name__ == "__main__":
+    main()

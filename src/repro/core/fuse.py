@@ -1,0 +1,129 @@
+"""Complexity-reduction fusions — paper contribution C6.
+
+1. BatchNorm folding: the paper merges the batch-norm layer into the
+   preceding convolution ("An efficient method is applied to merge the
+   batch norm layer into convolutional layer", §I.B(2)).  Exact algebra:
+       y = gamma * (conv(x, W) + b - mean) / sqrt(var + eps) + beta
+         = conv(x, W * s) + (b - mean) * s + beta,   s = gamma / sqrt(var+eps)
+
+2. Upsample padding minimization (−75% upsample compute): a 2x
+   zero-insertion upsample followed by a 3x3 convolution spends 3/4 of its
+   MACs multiplying structural zeros.  Phase-decomposing the kernel over
+   the four output phases computes only the non-zero taps:
+
+       phase (0,0): 1 tap   (w[1,1])
+       phase (0,1): 2 taps  (w[1,0], w[1,2])
+       phase (1,0): 2 taps  (w[0,1], w[2,1])
+       phase (1,1): 4 taps  (w[0,0], w[0,2], w[2,0], w[2,2])
+
+   9 taps per 4 outputs versus 36 for the naive version — exactly the
+   paper's 75% reduction.  ``upsample2x_conv3x3_fused`` is bit-identical
+   to the naive zero-insert+conv (test-verified).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def fold_batchnorm(
+    w: jax.Array,
+    b: jax.Array | None,
+    gamma: jax.Array,
+    beta: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    eps: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold BN(conv(x, w) + b) into a single conv's (w', b').
+
+    w: (kh, kw, cin, cout); BN params: (cout,).
+    """
+    s = gamma * lax.rsqrt(var + eps)
+    w_f = w * s[None, None, None, :]
+    b0 = jnp.zeros_like(beta) if b is None else b
+    b_f = (b0 - mean) * s + beta
+    return w_f, b_f
+
+
+# ---------------------------------------------------------------------------
+# Upsample-conv phase decomposition
+# ---------------------------------------------------------------------------
+
+def zero_insert_2x(x: jax.Array) -> jax.Array:
+    """(N, H, W, C) -> (N, 2H, 2W, C) with x at even coordinates."""
+    n, h, w, c = x.shape
+    out = jnp.zeros((n, 2 * h, 2 * w, c), x.dtype)
+    return out.at[:, ::2, ::2, :].set(x)
+
+
+@jax.jit
+def upsample2x_conv3x3_naive(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference: conv3x3(zero_insert_2x(x)), SAME padding.  36 MACs / 4 out."""
+    y = zero_insert_2x(x)
+    return lax.conv_general_dilated(
+        y, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+@jax.jit
+def upsample2x_conv3x3_fused(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Phase-decomposed equivalent — 9 MACs / 4 outputs (−75%).
+
+    Output z[p, q] = sum_{u,v in {-1,0,1}} w[1+u, 1+v] * y[p+u, q+v] where y
+    is the zero-inserted input; y is non-zero only at even coordinates, so
+    each output phase (p%2, q%2) touches a fixed sub-kernel:
+
+        z[2i, 2j]     = w[1,1] x[i,j]
+        z[2i, 2j+1]   = w[1,0] x[i,j] + w[1,2] x[i,j+1]
+        z[2i+1, 2j]   = w[0,1] x[i,j] + w[2,1] x[i+1,j]   (note: u=-1 maps
+        z[2i+1, 2j+1] = w[0,0] x[i,j] + w[0,2] x[i,j+1]    to row 0 of w and
+                      + w[2,0] x[i+1,j] + w[2,2] x[i+1,j+1]  hits x[i+1,·])
+    """
+    n, h, wd, cin = x.shape
+    _, _, cin2, cout = w.shape
+    assert cin2 == cin
+    dn = ("NHWC", "HWIO", "NHWC")
+
+    # phase (0,0): 1x1 conv with w[1,1]
+    p00 = lax.conv_general_dilated(
+        x, w[1:2, 1:2], (1, 1), "VALID", dimension_numbers=dn)
+    # phase (0,1): z[2i,2j+1] = w[1,0] x[i,j] + w[1,2] x[i,j+1]
+    #   == 1x2 conv over x columns with kernel [w[1,0], w[1,2]], pad right 1
+    p01 = lax.conv_general_dilated(
+        x, w[1:2, 0::2], (1, 1), [(0, 0), (0, 1)], dimension_numbers=dn)
+    # phase (1,0): z[2i+1,2j] = w[0,1] x[i,j] + w[2,1] x[i+1,j]
+    #   == 2x1 conv over rows with kernel [w[0,1]; w[2,1]], pad bottom 1.
+    #   Note row order: output row 2i+1 sees y rows 2i (u=-1 -> w[0]) and
+    #   2i+2 (u=+1 -> w[2]); y row 2i = x[i], y row 2i+2 = x[i+1].
+    p10 = lax.conv_general_dilated(
+        x, w[0::2, 1:2], (1, 1), [(0, 1), (0, 0)], dimension_numbers=dn)
+    # phase (1,1): 2x2 conv with the four corners
+    p11 = lax.conv_general_dilated(
+        x, w[0::2, 0::2], (1, 1), [(0, 1), (0, 1)], dimension_numbers=dn)
+
+    # interleave the four phases
+    out = jnp.zeros((n, 2 * h, 2 * wd, cout), p00.dtype)
+    out = out.at[:, 0::2, 0::2].set(p00)
+    out = out.at[:, 0::2, 1::2].set(p01)
+    out = out.at[:, 1::2, 0::2].set(p10)
+    out = out.at[:, 1::2, 1::2].set(p11)
+    return out
+
+
+def upsample_nearest_2x(x: jax.Array) -> jax.Array:
+    """Plain nearest upsample (EAST-style fusion merge path)."""
+    n, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, 2, w, 2, c))
+    return x.reshape(n, 2 * h, 2 * w, c)
+
+
+def upsample_mac_counts(h: int, w: int, cin: int, cout: int) -> dict:
+    naive = (2 * h) * (2 * w) * 9 * cin * cout
+    fused = h * w * (1 + 2 + 2 + 4) * cin * cout
+    return {"naive": naive, "fused": fused, "reduction": 1 - fused / naive}

@@ -1,0 +1,360 @@
+"""Microcode interpreter — the paper's FCN module + microcode interpreter
+(Fig. 5), as a trace-time executor emitting one XLA program.
+
+The hardware parses one microcode per layer and drives fixed datapath
+units (conv / pool / upsample / post-process) against a DDR4 data pool.
+Here the data pool is a trace-time *arena* keyed by the microcode address
+fields; the datapath units are jnp/Pallas implementations chosen by
+``mode``:
+
+    mode="reference"  pure lax/jnp ops (the oracle)
+    mode="optimized"  Winograd F(4x4,3x3) for stride-1 3x3 convs, fused
+                      phase-decomposed upsample, Pallas kernels where
+                      available
+
+BFP numerics (paper §III.E): when a :class:`BFPConfig` is given, conv
+inputs and weights are run through Algorithm 1 quantization before the MAC
+and the accumulator stays wide (f32 >= the paper's 15-bit mantissa) — the
+§IV.C accuracy-maintenance discipline.  Storage between layers is FP16
+(``storage_dtype``), exactly the paper's data-pool format.
+
+The same interpreter executes LM architectures: :func:`build_stream_fn`
+turns a microcode segment into a layer function by dispatching extended
+opcodes against a module registry (the "datapath modules" for
+transformers), with ``res_op`` cache/add providing residual connections —
+the transformer residual is *literally* the paper's Fig. 3 mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import bfp as bfp_lib
+from . import fuse, winograd
+from .assembler import Program, STORAGE_BYTES
+from .microcode import ExtOp, LayerType, Microcode, ResOp
+
+
+@dataclasses.dataclass(frozen=True)
+class BFPConfig:
+    block_size: int = bfp_lib.DEFAULT_BLOCK
+    mantissa_bits: int = bfp_lib.DEFAULT_MANTISSA
+    rounding: str = "trunc"
+    wide_accum: bool = True      # False reproduces the pre-Fig.7 failure
+
+
+def _he_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+class FCNEngine:
+    """Executes an assembled FCN :class:`Program` (paper Figs. 2 & 5)."""
+
+    def __init__(
+        self,
+        program: Program,
+        mode: str = "reference",
+        bfp: Optional[BFPConfig] = None,
+        storage_dtype=jnp.float32,
+        use_pallas: bool = False,
+    ):
+        if mode not in ("reference", "optimized"):
+            raise ValueError(mode)
+        self.program = program
+        self.mode = mode
+        self.bfp = bfp
+        self.storage_dtype = storage_dtype
+        self.use_pallas = use_pallas
+
+    # -- parameters ----------------------------------------------------------
+    def init_params(self, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
+        params: Dict[str, Dict[str, jax.Array]] = {}
+        for idx, name in self.program.weight_bindings.items():
+            mc = self.program.words[idx]
+            spec = self.program.layer_specs[idx]
+            key, k1 = jax.random.split(key)
+            if spec.op == "conv":
+                k = mc.kernel_size
+                cin, cout = mc.in_ch, mc.out_ch
+                if spec.table and spec.table.get("depthwise"):
+                    p = {"w": _he_init(k1, (k, k, 1, cout), k * k)}
+                else:
+                    p = {"w": _he_init(k1, (k, k, cin, cout), k * k * cin)}
+                if spec.bias:
+                    p["b"] = jnp.zeros((cout,), jnp.float32)
+                if spec.bn:
+                    p.update(
+                        gamma=jnp.ones((cout,), jnp.float32),
+                        beta=jnp.zeros((cout,), jnp.float32),
+                        mean=jnp.zeros((cout,), jnp.float32),
+                        var=jnp.ones((cout,), jnp.float32),
+                    )
+                params[name] = p
+            elif spec.op == "upsample" and spec.upsample_mode == "fused":
+                cin = mc.in_ch
+                cout = mc.out_ch or cin
+                params[name] = {"w": _he_init(k1, (3, 3, cin, cout), 9 * cin)}
+        return params
+
+    def normalize_weights(self, params):
+        """Paper Fig. 4 right branch: fold BN, then BFP-normalize weights."""
+        out = {}
+        for idx, name in self.program.weight_bindings.items():
+            spec = self.program.layer_specs[idx]
+            p = dict(params[name])
+            if spec.op == "conv" and spec.bn:
+                w, b = fuse.fold_batchnorm(
+                    p["w"], p.get("b"), p["gamma"], p["beta"], p["mean"],
+                    p["var"],
+                )
+                p = {"w": w, "b": b}
+            if self.bfp is not None and "w" in p:
+                p["w"] = bfp_lib.roundtrip(
+                    p["w"],
+                    block_size=self.bfp.block_size,
+                    mantissa_bits=self.bfp.mantissa_bits,
+                    axis=-2,                       # block along Cin (K dim)
+                    rounding=self.bfp.rounding,
+                )
+            out[name] = p
+        return out
+
+    # -- datapath units -------------------------------------------------------
+    def _conv(self, x, p, mc: Microcode, spec):
+        w = p["w"]
+        if getattr(self, "_transposed", False):
+            # transposed-image mode: transpose the weight kernels (paper:
+            # "transposing the corresponding weight kernels and modifying
+            # the convolution mode")
+            w = jnp.swapaxes(w, 0, 1)
+        if self.bfp is not None:
+            x = bfp_lib.roundtrip(
+                x.astype(jnp.float32),
+                block_size=self.bfp.block_size,
+                mantissa_bits=self.bfp.mantissa_bits,
+                axis=-1,
+                rounding=self.bfp.rounding,
+            )
+            # weights already normalized offline if normalize_weights() was
+            # used; quantizing again is idempotent for trunc rounding.
+        x = x.astype(jnp.float32)
+        w = w.astype(jnp.float32)
+        if spec.table and spec.table.get("depthwise"):
+            y = lax.conv_general_dilated(
+                x, w, (mc.stride_n, mc.stride_n), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=mc.in_ch,
+                preferred_element_type=jnp.float32,
+            )
+            if "b" in p:
+                y = y + p["b"]
+            return y
+        if (
+            self.mode == "optimized"
+            and mc.kernel_size == 3
+            and mc.stride_n == 1
+        ):
+            if self.use_pallas:
+                from repro.kernels.winograd_conv import ops as wops
+
+                y = wops.winograd_conv2d(x, w)
+            else:
+                y = winograd.winograd_conv2d(x, w, padding="SAME")
+        else:
+            y = lax.conv_general_dilated(
+                x, w, (mc.stride_n, mc.stride_n), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                preferred_element_type=jnp.float32,
+            )
+        if "b" in p:
+            y = y + p["b"]
+        return y
+
+    @staticmethod
+    def _pool(x, mc: Microcode, spec):
+        k = 2 if mc.kernel == 0 else 3
+        s = mc.stride_n
+        if spec.pool_kind == "max":
+            init, op = -jnp.inf, lax.max
+        else:
+            init, op = 0.0, lax.add
+        y = lax.reduce_window(
+            x, init, op, (1, k, k, 1), (1, s, s, 1), "SAME"
+        )
+        if spec.pool_kind == "avg":
+            y = y / (k * k)
+        return y
+
+    def _upsample(self, x, p, mc, spec):
+        if spec.upsample_mode == "nearest":
+            return fuse.upsample_nearest_2x(x)
+        w = p["w"].astype(jnp.float32)
+        if self.mode == "optimized":
+            return fuse.upsample2x_conv3x3_fused(x.astype(jnp.float32), w)
+        return fuse.upsample2x_conv3x3_naive(x.astype(jnp.float32), w)
+
+    # -- the interpreter loop ---------------------------------------------------
+    def __call__(
+        self, params, x: jax.Array, *, transposed: bool = False
+    ) -> Dict[str, jax.Array]:
+        """x: (N, H, W, C) matching the program's input plane.
+
+        ``transposed=True`` is the paper's §IV.B over-wide-image mode: the
+        SAME microcode program runs on the transposed plane with
+        transposed kernels (square kernels, symmetric strides — so the
+        datapath is reused unchanged); outputs come back transposed and
+        the caller inverse-transposes.  Region extents are invariant
+        (H*W*C bytes), so the address plan still holds.
+        """
+        prog = self.program
+        c0, h0, w0 = prog.input_shape_chw
+        if transposed:
+            if x.shape[1:] != (w0, h0, c0):
+                raise ValueError(
+                    f"transposed input {x.shape} != plane {(w0, h0, c0)}"
+                )
+        elif x.shape[1:] != (h0, w0, c0):
+            raise ValueError(
+                f"input {x.shape} != program plane {(h0, w0, c0)}"
+            )
+        self._transposed = transposed
+        arena: Dict[int, jax.Array] = {prog.input_addr: x}
+        extents: Dict[int, int] = {
+            prog.input_addr: h0 * w0 * c0 * STORAGE_BYTES
+        }
+        cache: Optional[jax.Array] = None
+
+        def read(addr: int, want_ch: int) -> jax.Array:
+            if addr in arena and arena[addr].shape[-1] == want_ch:
+                return arena[addr]
+            # concat read: collect memory-contiguous buffers from addr
+            parts, cur, got = [], addr, 0
+            while got < want_ch:
+                if cur not in arena:
+                    raise KeyError(
+                        f"read at {cur:#x}: no buffer (concat walk from "
+                        f"{addr:#x}, have {got}/{want_ch} channels)"
+                    )
+                buf = arena[cur]
+                parts.append(buf)
+                got += buf.shape[-1]
+                cur += extents[cur]
+            if got != want_ch:
+                raise ValueError(f"concat channel mismatch {got}!={want_ch}")
+            return jnp.concatenate(parts, axis=-1)
+
+        for idx, mc in enumerate(prog.words):
+            spec = prog.layer_specs[idx]
+            xin = read(mc.in_addr, mc.in_ch)
+            name = prog.weight_bindings.get(idx)
+            p = params.get(name, {}) if name else {}
+            lt = LayerType(mc.layer_type)
+            if lt == LayerType.CONV:
+                y = self._conv(xin, p, mc, spec)
+            elif lt == LayerType.POOL:
+                y = self._pool(xin, mc, spec)
+            elif lt == LayerType.UPSAMPLE:
+                y = self._upsample(xin, p, mc, spec)
+            else:
+                op = ExtOp(mc.ext_opcode)
+                if op == ExtOp.SIGMOID:
+                    y = jax.nn.sigmoid(xin)
+                elif op == ExtOp.ADD:
+                    y = xin + read(mc.ext_addr2, mc.in_ch)
+                elif op == ExtOp.IDENTITY:
+                    y = xin
+                else:
+                    raise NotImplementedError(
+                        f"FCN engine does not implement {op!r}; LM opcodes "
+                        f"run through build_stream_fn"
+                    )
+            if mc.res_op == ResOp.CACHE:
+                cache = y
+            elif mc.res_op == ResOp.ADD:
+                assert cache is not None, "res add with empty cache register"
+                y = y + cache
+            if mc.relu:
+                y = jax.nn.relu(y)
+            # write back to the data pool in storage precision (FP16 in the
+            # paper; f32 for the reference numerics)
+            y = y.astype(self.storage_dtype)
+            arena[mc.out_addr] = y
+            h, w, c = prog.addr_shapes[mc.out_addr]
+            extents[mc.out_addr] = h * w * c * STORAGE_BYTES
+
+        return {k: arena[a] for k, a in prog.outputs.items()}
+
+
+# ---------------------------------------------------------------------------
+# LM stream execution — same ISA, transformer datapath modules.
+# ---------------------------------------------------------------------------
+
+# module signature: fn(params, x, *, mc, table, ctx) -> y
+ModuleFn = Callable[..., jax.Array]
+
+
+def build_stream_fn(
+    words: Sequence[Microcode],
+    tables: Sequence[Dict[str, Any]],
+    registry: Dict[ExtOp, ModuleFn],
+    weight_bindings: Dict[int, str],
+):
+    """Compile a microcode segment into ``fn(params, x, ctx) -> (y, ctx)``.
+
+    ``params`` is a dict keyed by binding name.  The residual cache/add
+    register is interpreted exactly as in :class:`FCNEngine`; transformer
+    pre-norm residuals are expressed as IDENTITY(cache) ... ATTN(add).
+    The returned function is pure and scan-friendly: a transformer stack
+    scans it over stacked per-layer params (see models/lm/transformer.py).
+    """
+
+    words = list(words)
+
+    def _deq(p, ctx):
+        """BFP-stored weights (serving mode): int8 mantissas stream from
+        HBM; the widening to compute dtype is the VMEM dequant unit."""
+        is_bfp = lambda x: isinstance(x, bfp_lib.BFPTensor)
+        if not any(is_bfp(l) for l in
+                   jax.tree_util.tree_leaves(p, is_leaf=is_bfp)):
+            return p
+        dt = ctx.get("compute_dtype", jnp.bfloat16)
+        return jax.tree_util.tree_map(
+            lambda x: bfp_lib.dequantize(x).astype(dt) if is_bfp(x) else x,
+            p, is_leaf=is_bfp,
+        )
+
+    def fn(params, x, ctx=None):
+        ctx = {} if ctx is None else ctx
+        cache = None
+        cur = x
+        for idx, mc in enumerate(words):
+            op = ExtOp(mc.ext_opcode)
+            name = weight_bindings.get(idx)
+            p = params.get(name) if name else None
+            if p is not None:
+                p = _deq(p, ctx)
+            table = tables[mc.ext_table_idx - 1] if mc.ext_table_idx else {}
+            if op == ExtOp.IDENTITY:
+                y = cur
+            elif op == ExtOp.ADD:
+                y = cur + (cache if cache is not None else 0)
+            elif op in registry:
+                y = registry[op](p, cur, mc=mc, table=table, ctx=ctx)
+            else:
+                raise NotImplementedError(f"no module registered for {op!r}")
+            if mc.res_op == ResOp.CACHE:
+                cache = y
+            elif mc.res_op == ResOp.ADD and op != ExtOp.ADD:
+                assert cache is not None
+                y = y + cache
+            if mc.relu:
+                y = jax.nn.relu(y)
+            cur = y
+        return cur, ctx
+
+    return fn

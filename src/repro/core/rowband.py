@@ -1,0 +1,83 @@
+"""Row-wise segmentation (paper §IV.B) — layer execution in horizontal
+bands.
+
+The FPGA streams each feature map through the datapath in bands of rows
+("multiple rows from different input channels are loaded and computed in
+each round until the entire feature map is scanned"), sizing the band so
+the on-chip buffer is filled but not blown — balancing load time against
+compute time.  On TPU the same pattern bounds the VMEM working set of a
+spatial layer: band = BlockSpec rows + halo.
+
+``conv2d_banded`` is bit-equivalent to the full-plane convolution
+(test-verified): band b computes output rows [r0, r1); it needs input
+rows [r0*s - p, (r1-1)*s + k - p] clipped to the plane, zero-padding only
+at the true image border.
+
+``band_schedule`` reproduces the paper's sizing rule: pick rows-per-round
+so (rows x W x Cin x bytes) fits the buffer budget.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def band_schedule(
+    h: int, w: int, cin: int, *, buffer_bytes: int, dtype_bytes: int = 2,
+    halo: int = 1,
+) -> List[Tuple[int, int]]:
+    """Output-row ranges per round such that each round's input band fits
+    the buffer (the paper's dynamic rows-per-round rule)."""
+    row_bytes = max(w * cin * dtype_bytes, 1)
+    rows = max(int(buffer_bytes // row_bytes) - 2 * halo, 1)
+    return [(r0, min(r0 + rows, h)) for r0 in range(0, h, rows)]
+
+
+def conv2d_banded(
+    x: jax.Array,            # (N, H, W, Cin)
+    w: jax.Array,            # (k, k, Cin, Cout)
+    *,
+    stride: int = 1,
+    n_bands: int = 0,
+    bands: List[Tuple[int, int]] | None = None,
+) -> jax.Array:
+    """SAME-padding conv computed band-by-band; equals the full conv."""
+    n, h, wd, cin = x.shape
+    k = w.shape[0]
+    pad = (k - 1) // 2
+    out_h = -(-h // stride)
+    if bands is None:
+        n_bands = max(n_bands, 1)
+        per = -(-out_h // n_bands)
+        bands = [(r0, min(r0 + per, out_h)) for r0 in range(0, out_h, per)]
+    outs = []
+    for r0, r1 in bands:
+        in_lo = r0 * stride - pad
+        in_hi = (r1 - 1) * stride + k - pad          # exclusive
+        lo = max(in_lo, 0)
+        hi = min(in_hi, h)
+        band = x[:, lo:hi]
+        # zero halo only where the true image border was crossed
+        top = lo - in_lo
+        bot = in_hi - hi
+        if top or bot:
+            band = jnp.pad(band, ((0, 0), (top, bot), (0, 0), (0, 0)))
+        y = lax.conv_general_dilated(
+            band, w, (stride, stride),
+            [(0, 0), (pad, pad)],                    # W padded, H exact
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def bytes_per_round(h0: int, h1: int, w: int, cin: int, k: int,
+                    stride: int, dtype_bytes: int = 2) -> int:
+    """Input bytes loaded for one round (halo included) — the load-vs-
+    compute balance term in the paper's §IV.B."""
+    pad = (k - 1) // 2
+    rows = (h1 - 1 - h0) * stride + k - 2 * pad + 2 * pad
+    return rows * w * cin * dtype_bytes

@@ -1,0 +1,147 @@
+"""Winograd F(4x4, 3x3) minimal filtering — paper §III.D, Eq. (1).
+
+Y = Aᵀ[(G W Gᵀ) ⊙ (Bᵀ X B)] A  with 6x6 input tiles, 4x4 output tiles:
+36 multiplies per tile versus 144 for direct convolution — the paper's
+4x multiply reduction on the DSP arrays.
+
+This module holds the exact Lavin–Gray transform matrices and a pure-jnp
+tiled convolution built on them.  ``kernels/winograd_conv`` implements the
+same computation as a Pallas TPU kernel (transforms in VMEM, the 36
+per-position contractions on the MXU); this file is its oracle and the
+fallback path of the interpreter's optimized mode.
+
+Honest TPU note (DESIGN.md §2): on the MXU the multiply-count argument is
+weak — the measured trade-off is recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TILE_IN = 6    # input tile
+TILE_OUT = 4   # output tile  (m = 4, r = 3)
+
+# Lavin & Gray, "Fast algorithms for convolutional neural networks".
+AT = np.array(
+    [
+        [1, 1, 1, 1, 1, 0],
+        [0, 1, -1, 2, -2, 0],
+        [0, 1, 1, 4, 4, 0],
+        [0, 1, -1, 8, -8, 1],
+    ],
+    dtype=np.float32,
+)
+G = np.array(
+    [
+        [1 / 4, 0, 0],
+        [-1 / 6, -1 / 6, -1 / 6],
+        [-1 / 6, 1 / 6, -1 / 6],
+        [1 / 24, 1 / 12, 1 / 6],
+        [1 / 24, -1 / 12, 1 / 6],
+        [0, 0, 1],
+    ],
+    dtype=np.float32,
+)
+BT = np.array(
+    [
+        [4, 0, -5, 0, 1, 0],
+        [0, -4, -4, 1, 1, 0],
+        [0, 4, -4, -1, 1, 0],
+        [0, -2, -1, 2, 1, 0],
+        [0, 2, -1, -2, 1, 0],
+        [0, 4, 0, -5, 0, 1],
+    ],
+    dtype=np.float32,
+)
+
+
+def transform_weights(w: jax.Array) -> jax.Array:
+    """G W Gᵀ, precomputed once per model load (paper: stored in supertile
+    RAM and ping-ponged against compute).
+
+    w: (3, 3, Cin, Cout) -> (6, 6, Cin, Cout)
+    """
+    g = jnp.asarray(G, w.dtype)
+    return jnp.einsum("ij,jkcf,lk->ilcf", g, w, g)
+
+
+def transform_input(tiles: jax.Array) -> jax.Array:
+    """Bᵀ X B for a batch of 6x6 input tiles: (..., 6, 6) -> (..., 6, 6)."""
+    bt = jnp.asarray(BT, tiles.dtype)
+    return jnp.einsum("ij,...jk,lk->...il", bt, tiles, bt)
+
+
+def transform_output(tiles: jax.Array) -> jax.Array:
+    """Aᵀ Y A: (..., 6, 6) -> (..., 4, 4)."""
+    at = jnp.asarray(AT, tiles.dtype)
+    return jnp.einsum("ij,...jk,lk->...il", at, tiles, at)
+
+
+def _extract_tiles(x: jax.Array, th: int, tw: int) -> jax.Array:
+    """(N, H', W', C) -> (N, th, tw, 6, 6, C) overlapping stride-4 tiles."""
+    idx_h = (jnp.arange(th) * TILE_OUT)[:, None] + jnp.arange(TILE_IN)[None, :]
+    idx_w = (jnp.arange(tw) * TILE_OUT)[:, None] + jnp.arange(TILE_IN)[None, :]
+    # gather rows then cols
+    xh = x[:, idx_h]                      # (N, th, 6, W', C)
+    return xh[:, :, :, idx_w]             # (N, th, 6, tw, 6, C) -> fix order
+
+
+@partial(jax.jit, static_argnames=("padding",))
+def winograd_conv2d(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """Stride-1 3x3 convolution via F(4x4, 3x3).
+
+    x: (N, H, W, Cin) NHWC; w: (3, 3, Cin, Cout).  Matches
+    ``lax.conv_general_dilated`` with SAME/VALID padding to f32 tolerance.
+    """
+    n, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert (kh, kw) == (3, 3) and cin2 == cin
+    if padding == "SAME":
+        ph = pw = 1
+        out_h, out_w = h, wd
+    elif padding == "VALID":
+        ph = pw = 0
+        out_h, out_w = h - 2, wd - 2
+    else:
+        raise ValueError(padding)
+    th = -(-out_h // TILE_OUT)
+    tw = -(-out_w // TILE_OUT)
+    # pad so tiles cover the full output: input extent needed = 4*t + 2
+    need_h = th * TILE_OUT + 2
+    need_w = tw * TILE_OUT + 2
+    xp = jnp.pad(
+        x,
+        ((0, 0), (ph, need_h - h - ph), (pw, need_w - wd - pw), (0, 0)),
+    )
+    tiles = _extract_tiles(xp, th, tw)            # (N, th, 6, tw, 6, C)
+    tiles = jnp.moveaxis(tiles, 2, 3)             # (N, th, tw, 6, 6, C)
+    v = transform_input(jnp.moveaxis(tiles, -1, -3))   # (N,th,tw,C,6,6)
+    u = transform_weights(w)                      # (6, 6, Cin, Cout)
+    # 36 independent (tiles x Cin) @ (Cin x Cout) contractions — the MXU
+    # work in the Pallas kernel:
+    mprod = jnp.einsum(
+        "ntwcij,ijcf->ntwijf",
+        v,
+        u,
+        preferred_element_type=jnp.float32,
+    )                                             # (N,th,tw,6,6,Cout)
+    y = transform_output(jnp.moveaxis(mprod, -1, -3))  # (N,th,tw,Cout,4,4)
+    y = jnp.moveaxis(y, 3, -1)                    # (N,th,tw,4,4,Cout)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(n, th * TILE_OUT, tw * TILE_OUT, cout)
+    return y[:, :out_h, :out_w, :]
+
+
+def multiply_count(h: int, w: int, cin: int, cout: int) -> dict:
+    """Napkin math used in benchmarks: multiplies per output for direct vs
+    Winograd (the paper's 144 -> 36 per 4x4 tile)."""
+    tiles = -(-h // TILE_OUT) * (-(-w // TILE_OUT))
+    direct = h * w * 9 * cin * cout
+    wino = tiles * 36 * cin * cout
+    # input/output transform multiplies (the paper rearranges BᵀXB from 12
+    # to 6 multiplies per row-pass; A/B entries are small ints/zeros)
+    transforms = tiles * (6 * 6 + 6 * 4) * (cin + cout)
+    return {"direct": direct, "winograd_mac": wino, "transform_ops": transforms,
+            "mac_reduction": direct / wino}

@@ -1,0 +1,4 @@
+from .pipeline import TokenDataset, Prefetcher
+from .images import SyntheticSTDData
+
+__all__ = ["TokenDataset", "Prefetcher", "SyntheticSTDData"]

@@ -1,0 +1,110 @@
+"""Host data pipeline.
+
+``TokenDataset`` — synthetic LM pretraining stream with two crucial
+production properties:
+  * step-indexed determinism: batch(step) is a pure function of (seed,
+    step), so a restarted/resumed job consumes *exactly* the byte stream
+    it would have seen — bit-exact resume (tested).
+  * host-sharded: each host materializes only its slice of the global
+    batch (``host_slice``), the multi-host ingestion pattern.
+
+``Prefetcher`` — double-buffered host->device feed: the next batch's
+device_put overlaps the current step (the paper's ping-pong input buffer,
+C4, at the host boundary).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenDataset:
+    """Synthetic autoregressive data with learnable structure (a noisy
+    repeat-copy language) so small models visibly learn — used by the
+    examples and convergence tests."""
+
+    def __init__(
+        self,
+        vocab: int,
+        seq_len: int,
+        global_batch: int,
+        *,
+        seed: int = 0,
+        n_hosts: int = 1,
+        host_id: int = 0,
+        structure: str = "repeat",      # repeat|uniform
+    ):
+        assert global_batch % n_hosts == 0
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.local_batch = global_batch // n_hosts
+        self.seed = seed
+        self.host_id = host_id
+        self.structure = structure
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id])
+        )
+        b, s, v = self.local_batch, self.seq_len, self.vocab
+        if self.structure == "uniform":
+            toks = rng.integers(0, v, size=(b, s), dtype=np.int32)
+        else:
+            # repeat-copy: period-p repetition + 10% noise -> predictable
+            period = rng.integers(3, 8, size=(b, 1))
+            base = rng.integers(0, v, size=(b, 8), dtype=np.int32)
+            idx = np.arange(s)[None, :] % period
+            toks = np.take_along_axis(base, idx, axis=1).astype(np.int32)
+            noise = rng.random((b, s)) < 0.1
+            toks = np.where(noise,
+                            rng.integers(0, v, size=(b, s)), toks)
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((b, 1), -1, np.int32)], axis=1
+        )
+        return {"tokens": toks, "labels": labels.astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Depth-2 host->device prefetch (ping-pong buffers)."""
+
+    def __init__(
+        self,
+        it: Iterator[Any],
+        *,
+        depth: int = 2,
+        put: Optional[Callable[[Any], Any]] = None,
+    ):
+        self._it = it
+        self._put = put or (lambda x: jax.tree_util.tree_map(jnp.asarray, x))
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(self._put(item))
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each package ships three layers:
+  kernel.py  pl.pallas_call body + BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrapper (layout, quantization, padding)
+  ref.py     pure-jnp oracle used by tests and as the interpreter fallback
+
+  bfp_matmul/       paper C2 — shared-exponent block-FP matmul, int8
+                    mantissa HBM traffic, f32 wide accumulation (§IV.C)
+  winograd_conv/    paper C3 — F(4x4,3x3), 36 MXU contractions per tile,
+                    output transform fused in-kernel
+  flash_attention/  blockwise online-softmax GQA attention (prefill path)
+  ssd_scan/         Mamba2 state-space-dual intra-chunk quadratic kernel
+"""

@@ -1,0 +1,1 @@
+from .ops import bfp_matmul  # noqa: F401

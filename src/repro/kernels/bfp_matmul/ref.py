@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the BFP matmul kernel (paper Algorithm 1 + §IV.C)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import bfp as bfp_lib
+
+
+def bfp_matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_size: int = bfp_lib.DEFAULT_BLOCK,
+    mantissa_bits: int = bfp_lib.DEFAULT_MANTISSA,
+    rounding: str = "trunc",
+) -> jax.Array:
+    """Bit-faithful BFP semantics with the wide (f32) accumulator."""
+    return bfp_lib.bfp_matmul_reference(
+        a,
+        b,
+        block_size=block_size,
+        mantissa_bits=mantissa_bits,
+        rounding=rounding,
+        wide_accum=True,
+    )

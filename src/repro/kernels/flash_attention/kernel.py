@@ -1,0 +1,140 @@
+"""Blockwise online-softmax attention (flash) — the prefill hot-spot.
+
+Not a paper contribution per se, but the paper's *discipline* applies
+directly: quantized/streamed inputs, wide accumulators, VMEM-resident
+running statistics (the ping-pong buffer idea at the register level).
+GQA is expressed in the BlockSpec index maps: query head h reads KV head
+h // group, so KV tiles are fetched once per group from HBM.
+
+Grid: (B, Hq, Lq/bq, Lkv/bk) with the KV axis innermost; running max m,
+normalizer l and the (bq, D) f32 accumulator live in VMEM scratch across
+the KV sweep.  Causal masking is done on global indices; fully-masked
+KV blocks are skipped with pl.when (block-level early-out).
+
+VMEM per step (bq=512, bk=512, D=128):
+    q 512*128*4 = 256 KiB, k/v 2*512*128*4 = 512 KiB, acc 256 KiB,
+    m/l 4 KiB  ->  ~1.3 MiB (+ ping-pong) — comfortable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,        # (1, 1, bq, D)
+    k_ref,        # (1, 1, bk, D)
+    v_ref,        # (1, 1, bk, D)
+    o_ref,        # (1, 1, bq, D)
+    m_ref,        # (bq, 1) f32 scratch — running max
+    l_ref,        # (bq, 1) f32 scratch — running normalizer
+    acc_ref,      # (bq, D) f32 scratch
+    *,
+    sm_scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    kv_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # causal early-out: the whole KV block is in the future
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                    # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            mask = mask & (cols <= rows)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "causal", "bq", "bk", "kv_len", "interpret"),
+)
+def flash_attention_padded(
+    q: jax.Array,        # (B, Hq, Lq, D)
+    k: jax.Array,        # (B, Hkv, Lkv, D)
+    v: jax.Array,        # (B, Hkv, Lkv, D)
+    *,
+    sm_scale: float,
+    causal: bool,
+    kv_len: int,         # true (unpadded) KV length for masking
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    bq = min(bq, Lq)
+    bk = min(bk, Lkv)
+    assert Lq % bq == 0 and Lkv % bk == 0
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            sm_scale=sm_scale, causal=causal, bq=bq, bk=bk, kv_len=kv_len,
+        ),
+        grid=(B, Hq, Lq // bq, Lkv // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""Public attention ops.
+
+``flash_attention`` — Pallas blockwise kernel for prefill/training
+(Lq == Lkv, causal).  ``decode_attention`` — single-token decode against a
+KV cache; this is a bandwidth-bound matvec that XLA already emits
+optimally, so it stays pure-jnp (kernel would add nothing — see
+EXPERIMENTS.md §Perf napkin math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_padded
+
+
+def _pad_len(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "causal", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,        # (B, Hq, L, D)
+    k: jax.Array,        # (B, Hkv, L, D)
+    v: jax.Array,        # (B, Hkv, L, D)
+    *,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Hq, L, D = q.shape
+    if sm_scale is None:
+        sm_scale = float(D) ** -0.5
+    bq_ = min(bq, L)
+    bk_ = min(bk, L)
+    qp = _pad_len(q, bq_, 2)
+    kp = _pad_len(k, bk_, 2)
+    vp = _pad_len(v, bk_, 2)
+    out = flash_attention_padded(
+        qp, kp, vp,
+        sm_scale=float(sm_scale), causal=causal, kv_len=L,
+        bq=bq_, bk=bk_, interpret=interpret,
+    )
+    return out[:, :, :L, :]
+
+
+@jax.jit
+def decode_attention(
+    q: jax.Array,         # (B, Hq, 1, D) — one new token
+    k_cache: jax.Array,   # (B, Hkv, S, D)
+    v_cache: jax.Array,   # (B, Hkv, S, D)
+    cache_len: jax.Array | int,   # valid prefix length(s), (B,) or scalar
+) -> jax.Array:
+    B, Hq, _, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    sm_scale = float(D) ** -0.5
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * sm_scale
+    pos = jnp.arange(S)[None, None, None, :]
+    lim = jnp.asarray(cache_len)
+    lim = lim.reshape(-1, 1, 1, 1) if lim.ndim else lim
+    s = jnp.where(pos < lim, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)

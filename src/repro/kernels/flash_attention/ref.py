@@ -1,0 +1,35 @@
+"""Dense-softmax oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jax.Array,        # (B, Hq, Lq, D)
+    k: jax.Array,        # (B, Hkv, Lkv, D)
+    v: jax.Array,        # (B, Hkv, Lkv, D)
+    *,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    kv_len: int | None = None,
+) -> jax.Array:
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * sm_scale
+    cols = jnp.arange(Lkv)[None, :]
+    rows = jnp.arange(Lq)[:, None]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if kv_len is not None:
+        mask = mask & (cols < kv_len)
+    if causal:
+        mask = mask & (cols <= rows + (Lkv - Lq))  # right-aligned causal
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

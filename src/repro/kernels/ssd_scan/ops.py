@@ -1,0 +1,113 @@
+"""Public SSD op: chunked Mamba2 scan.
+
+Intra-chunk quadratic work runs in the Pallas kernel; the O(L/Lc)
+inter-chunk state carry is a lax.scan in XLA.  Exactly equivalent to the
+sequential recurrence in ref.py (tests assert allclose), but built from
+MXU-shaped matmuls — the TPU-idiomatic form of the paper's "fixed compute
+modules, thin control" discipline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H)     (positive; softplus applied upstream)
+    A: jax.Array,      # (H,)          (negative)
+    Bm: jax.Array,     # (B, L, G, N)
+    Cm: jax.Array,     # (B, L, G, N)
+    D: jax.Array,      # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    Bsz, L, H, P = x.shape
+    _, _, G, N = Bm.shape
+    hpg = H // G
+    Lc = min(chunk, L)
+    assert L % Lc == 0, (L, Lc)
+    nc = L // Lc
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A[None, None, :]                        # (B, L, H) log-decay
+    # chunked views
+    lac = la.reshape(Bsz, nc, Lc, H)
+    scum = jnp.cumsum(lac, axis=2)                     # inclusive, per chunk
+    xdt = (xf * dtf[..., None]).reshape(Bsz, nc, Lc, H, P)
+    Bc = Bm.reshape(Bsz, nc, Lc, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Lc, G, N).astype(jnp.float32)
+
+    # kernel layout: (BC, G, [HPG,] ...)
+    BC = Bsz * nc
+    c_k = Cc.transpose(0, 1, 3, 2, 4).reshape(BC, G, Lc, N)
+    b_k = Bc.transpose(0, 1, 3, 2, 4).reshape(BC, G, Lc, N)
+    xdt_k = (
+        xdt.transpose(0, 1, 3, 2, 4)                   # (B, nc, H, Lc, P)
+        .reshape(BC, G, hpg, Lc, P)
+    )
+    scum_k = (
+        scum.transpose(0, 1, 3, 2)                     # (B, nc, H, Lc)
+        .reshape(BC, G, hpg, Lc, 1)
+    )
+    y_intra, st = ssd_chunk(c_k, b_k, xdt_k, scum_k, interpret=interpret)
+    y_intra = (
+        y_intra.reshape(Bsz, nc, H, Lc, P).transpose(0, 1, 3, 2, 4)
+    )                                                   # (B, nc, Lc, H, P)
+    st = st.reshape(Bsz, nc, H, P, N)                  # chunk-local end state
+
+    # inter-chunk carry: h_c = exp(s_L)^c h_{c-1} + st_c
+    tot = jnp.exp(scum[:, :, -1, :])                   # (B, nc, H) chunk decay
+
+    def carry(h, inp):
+        st_c, dec_c = inp                              # (B,H,P,N), (B,H)
+        h_out = h                                      # state *entering* chunk
+        h = h * dec_c[..., None, None] + st_c
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry,
+        h0,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(tot, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                    # (B, nc, H, P, N)
+
+    # inter-chunk output: y_t += exp(s_t) * C_t · h_in(chunk)
+    Ch = jnp.repeat(Cc, hpg, axis=3)                   # (B, nc, Lc, H, N)
+    dec_t = jnp.exp(scum)                              # (B, nc, Lc, H)
+    y_inter = jnp.einsum(
+        "bclhn,bchpn->bclhp", Ch * dec_t[..., None], h_in
+    )
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y + xf * D[None, None, :, None]
+
+
+def ssd_decode_step(
+    h: jax.Array,      # (B, H, P, N) carried state
+    x_t: jax.Array,    # (B, H, P)
+    dt_t: jax.Array,   # (B, H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B, G, N)
+    C_t: jax.Array,    # (B, G, N)
+    D: jax.Array,      # (H,)
+):
+    """O(1) single-token decode — the SSM's long-context superpower."""
+    Bsz, H, P = x_t.shape
+    G = B_t.shape[1]
+    hpg = H // G
+    Bh = jnp.repeat(B_t, hpg, axis=1)                  # (B, H, N)
+    Ch = jnp.repeat(C_t, hpg, axis=1)
+    a = jnp.exp(dt_t * A[None, :])                     # (B, H)
+    h = h * a[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x_t * dt_t[..., None], Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + x_t * D[None, :, None]
+    return h, y

@@ -1,0 +1,49 @@
+"""Naive sequential recurrence — the SSD oracle (Mamba2, arXiv:2405.21060).
+
+State h: (H, P, N) per batch element.  Per timestep t:
+    a_t = exp(dt_t * A_h)                    (scalar decay per head)
+    h_t = a_t * h_{t-1} + dt_t * x_t ⊗ B_t   (outer product over (P, N))
+    y_t = h_t · C_t + D_h * x_t
+
+B and C are shared across the heads of a group (G groups, H heads,
+head h uses group h // (H // G)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H)        (already softplus'd, > 0)
+    A: jax.Array,      # (H,)             (negative)
+    Bm: jax.Array,     # (B, L, G, N)
+    Cm: jax.Array,     # (B, L, G, N)
+    D: jax.Array,      # (H,)
+) -> jax.Array:
+    Bsz, L, H, P = x.shape
+    _, _, G, N = Bm.shape
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=2)       # (B, L, H, N)
+    Ch = jnp.repeat(Cm, hpg, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp              # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        a = jnp.exp(dtt * A[None, :])      # (B, H)
+        h = h * a[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Ch, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)             # (B, L, H, P)
+    return y + x.astype(jnp.float32) * D[None, None, :, None]

@@ -1,0 +1,1 @@
+from .ops import winograd_conv2d  # noqa: F401

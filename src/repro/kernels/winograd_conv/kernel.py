@@ -1,0 +1,95 @@
+"""Winograd F(4x4,3x3) Pallas kernel — paper C3 on the MXU.
+
+Split of work (DESIGN.md §2): the input transform BᵀXB is a small
+data-layout computation done in XLA (ops.py); this kernel runs the part
+the paper puts on its DSP supertile arrays — the 36 per-position
+(tiles × Cin) · (Cin × Cout) contractions — on the MXU, and *fuses the
+output transform AᵀYA in-kernel*.  Fusing the output transform matters on
+TPU: the intermediate M tensor is 36/16 = 2.25x the output size, so
+writing it to HBM would more than double the kernel's write traffic.
+
+Grid: (P/bp, Cout/bn, Cin/bk) with Cin innermost; the (36, bp, bn) f32
+accumulator lives in VMEM scratch across the Cin sweep.
+
+VMEM per step (bp=128, bn=128, bk=128):
+    V tile   128*36*128*4  = 2.25 MiB   (x2 ping-pong)
+    U tile   36*128*128*4  = 2.25 MiB
+    acc      36*128*128*4  = 2.25 MiB
+    out      128*16*128*4  = 1.00 MiB
+  ~10 MiB with double buffering — inside a v5e-class core budget; tests
+  sweep smaller blocks too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.winograd import AT
+
+
+def _winograd_mm_kernel(at_ref, v_ref, u_ref, o_ref, acc_ref):
+    """at: (4, 6) Aᵀ; v: (bp, 36, bk); u: (36, bk, bn); o: (bp, 16, bn)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = v_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    # 36 independent MXU contractions, batched over the position axis
+    acc_ref[...] += jax.lax.dot_general(
+        jnp.swapaxes(v, 0, 1),            # (36, bp, bk)
+        u,                                # (36, bk, bn)
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                     # (36, bp, bn)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        acc = acc_ref[...]                # (36, bp, bn)
+        bp, bn = acc.shape[1], acc.shape[2]
+        at = at_ref[...]                  # (4, 6)
+        m = acc.reshape(6, 6, bp, bn)
+        # Y = Aᵀ M A over the two 6-axes (VPU work, fused with the flush)
+        y = jnp.einsum("ij,jkpn,lk->ilpn", at, m, at)    # (4, 4, bp, bn)
+        o_ref[...] = y.reshape(16, bp, bn).transpose(1, 0, 2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bp", "bn", "bk", "interpret")
+)
+def winograd_tile_matmul(
+    v: jax.Array,          # (P, 36, Cin)  transformed input tiles
+    u: jax.Array,          # (36, Cin, Cout) transformed weights (G W Gᵀ)
+    *,
+    bp: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (P, 16, Cout) output tiles (4x4 row-major per tile)."""
+    P, t36, K = v.shape
+    _, _, N = u.shape
+    assert t36 == 36
+    bp = min(bp, P)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert P % bp == 0 and N % bn == 0 and K % bk == 0, (P, N, K, bp, bn, bk)
+    return pl.pallas_call(
+        _winograd_mm_kernel,
+        grid=(P // bp, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((4, 6), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bp, 36, bk), lambda i, j, k: (i, 0, k)),
+            pl.BlockSpec((36, bk, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, 16, bn), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((P, 16, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((36, bp, bn), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(AT, jnp.float32), v, u)

@@ -1,0 +1,21 @@
+"""Oracle for the Winograd kernel: direct convolution + the pure-jnp
+Winograd implementation from repro.core (both must agree)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.winograd import winograd_conv2d as winograd_conv2d_jnp  # noqa: F401
+
+
+def direct_conv2d(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """NHWC stride-1 3x3 convolution via lax — the ground truth."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    )

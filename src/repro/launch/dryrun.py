@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile EVERY
+(architecture x input-shape x mesh) cell against the production mesh,
+with ShapeDtypeStruct stand-ins — no parameter is ever allocated.
+
+The two lines above MUST stay the first statements in this module (before
+any jax-importing import): jax locks the device count at first init.
+
+Per cell we record:
+  * memory_analysis()      — bytes per device (proves it fits / flags it)
+  * cost_analysis()        — HLO FLOPs + bytes accessed (roofline terms)
+  * collective bytes       — parsed from optimized HLO (hlo_analysis)
+into reports/dryrun/<arch>__<shape>__<mesh>.json, which §Roofline and
+EXPERIMENTS.md read.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "multipod" if multi_pod else "singlepod"
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool,
+    report_dir: str = REPORT_DIR, verbose: bool = True,
+    extra_tag: str = "", cfg_overrides: Dict[str, Any] | None = None,
+    **build_kw,
+) -> Dict[str, Any]:
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.step_fns import build_step
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}{extra_tag}"
+    ok, reason = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+        "n_devices": mesh.devices.size,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(report_dir, tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({reason})")
+        return rec
+
+    t0 = time.time()
+    try:
+        if build_kw.pop("unroll_analysis", False):
+            # cost_analysis counts while bodies ONCE; the roofline pass
+            # compiles with fully unrolled layer scans for true totals
+            build_kw["scan_unroll"] = 4096
+        built = build_step(cfg, mesh, shape, **build_kw)
+        with mesh:
+            lowered = built.fn.lower(*built.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = hlo_analysis.collective_bytes(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=float(cost.get("flops", -1.0)),
+            bytes_accessed_per_device=float(cost.get("bytes accessed", -1.0)),
+            collective_bytes_per_device=coll,
+            memory={
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                "alias_size_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            hlo_op_histogram=hlo_analysis.op_histogram(hlo),
+            step_kind=built.meta.get("kind"),
+        )
+        if verbose:
+            ma = rec["memory"]
+            per_dev = (ma["argument_size_bytes"] or 0) + (
+                ma["temp_size_bytes"] or 0)
+            print(
+                f"[dryrun] {tag}: OK  flops/dev={rec['flops_per_device']:.3e}"
+                f"  bytes/dev={rec['bytes_accessed_per_device']:.3e}"
+                f"  coll/dev={coll['total']:.3e}B"
+                f"  mem/dev~{per_dev/2**30:.2f}GiB"
+                f"  (lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+            )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug; record it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {tag}: ERROR {type(e).__name__}: {e}")
+    _write(report_dir, tag, rec)
+    return rec
+
+
+def _write(report_dir: str, tag: str, rec: Dict[str, Any]):
+    os.makedirs(report_dir, exist_ok=True)
+    with open(os.path.join(report_dir, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unrolled-scan analysis compile (true FLOP/byte/"
+                         "collective counts; see benchmarks.roofline)")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+
+    n_bad = 0
+    extra = "__unrolled" if args.unroll else ""
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{_mesh_tag(mp)}{extra}"
+                path = os.path.join(args.report_dir, f"{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] {tag}: cached")
+                            continue
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               report_dir=args.report_dir,
+                               extra_tag=extra,
+                               unroll_analysis=args.unroll)
+                if rec["status"] == "error":
+                    n_bad += 1
+    print(f"[dryrun] done, {n_bad} failed cells")
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

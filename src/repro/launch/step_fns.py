@@ -1,0 +1,269 @@
+"""Step-function builders shared by dryrun/train/serve.
+
+Every builder returns (jitted_fn, abstract_args, shardings) so the
+dry-run can ``.lower(**abstract).compile()`` without allocating a single
+parameter — params/opt-state/caches come from ParamMeta trees as
+ShapeDtypeStructs, inputs from ``configs.input_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, input_specs
+from repro.core import bfp as bfp_lib
+from repro.models.lm import LMModel, cross_entropy
+from repro.models.lm import params as params_lib
+from repro.optim import adamw, clip_by_global_norm, cosine_with_warmup
+from repro.runtime import sharding as shd
+
+F32 = jnp.float32
+
+
+def default_moment_dtype(cfg: ArchConfig) -> str:
+    n = cfg.param_count()
+    if n > 100e9:
+        return "bfp8"        # kimi/grok class: §6 memory budget
+    if n > 10e9:
+        return "bfloat16"
+    return "float32"
+
+
+def _bfp_spec_like(param_spec: P, mantissa_shape, exp_shape, mesh) -> Any:
+    """Shardings for a BFPTensor moment: mantissa inherits the param spec;
+    the exponent (last dim / block) keeps axes that still divide."""
+    sizes = shd.mesh_axis_sizes(mesh)
+    parts = list(param_spec) + [None] * (len(mantissa_shape) - len(param_spec))
+    eparts = list(parts)
+    last = eparts[-1] if eparts else None
+    if last is not None:
+        ax = last if isinstance(last, tuple) else (last,)
+        total = int(np.prod([sizes[a] for a in ax]))
+        if exp_shape[-1] % total != 0:
+            eparts[-1] = None
+    return {
+        "mantissa": NamedSharding(mesh, P(*parts)),
+        "exponent": NamedSharding(mesh, P(*eparts)),
+    }
+
+
+def opt_state_shardings(metas, mesh: Mesh, moment_dtype: str, opt_init):
+    """Shardings matching the OptState structure (moments follow params).
+
+    Built by pairing the abstract opt-state leaves (post eval_shape) with
+    the param metas in flatten order, so BFPTensor aux data matches the
+    real state tree exactly.
+    """
+    abstract_params = params_lib.abstract(metas)
+    abstract_opt = jax.eval_shape(opt_init, abstract_params)
+    pspecs = params_lib.specs(metas, mesh)
+    is_bfp = lambda x: isinstance(x, bfp_lib.BFPTensor)
+    spec_leaves = jax.tree_util.tree_leaves(pspecs)
+
+    def moment_shardings(abstract_m):
+        leaves, treedef = jax.tree_util.tree_flatten(abstract_m,
+                                                     is_leaf=is_bfp)
+        out = []
+        for leaf, spec in zip(leaves, spec_leaves):
+            if is_bfp(leaf):
+                d = _bfp_spec_like(
+                    spec, leaf.mantissa.shape, leaf.exponent.shape, mesh
+                )
+                out.append(dataclasses.replace(
+                    leaf, mantissa=d["mantissa"], exponent=d["exponent"]
+                ))
+            else:
+                out.append(NamedSharding(mesh, spec))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    from repro.optim import OptState
+
+    return abstract_opt, OptState(
+        NamedSharding(mesh, P()),
+        moment_shardings(abstract_opt.mu),
+        moment_shardings(abstract_opt.nu),
+        None,
+    )
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                     # jitted function
+    abstract_args: Tuple        # positional ShapeDtypeStruct args
+    arg_shardings: Tuple
+    model: LMModel
+    meta: Dict[str, Any]
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    *,
+    moment_dtype: Optional[str] = None,
+    lr: float = 3e-4,
+    grad_clip: float = 1.0,
+    scan_unroll: int = 1,
+    seq_shard: bool = False,
+    n_micro: int = 1,
+) -> BuiltStep:
+    model = LMModel(cfg)
+    metas = model.param_meta()
+    md = moment_dtype or default_moment_dtype(cfg)
+    opt_init, opt_update = adamw(
+        cosine_with_warmup(lr, 2000, 100_000), moment_dtype=md
+    )
+    abstract_params = params_lib.abstract(metas)
+    param_sh = params_lib.shardings(metas, mesh)
+    abstract_opt, opt_sh = opt_state_shardings(metas, mesh, md, opt_init)
+
+    in_specs = input_specs(cfg, shape)
+    batch_sh = shd.input_shardings(mesh, in_specs)
+
+    cstr = shd.activation_constrainer(mesh, shape.global_batch,
+                                      seq_shard=seq_shard)
+    from repro.optim.grad_utils import GradAccumulator
+
+    accum = GradAccumulator(n_micro)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            logits = model.forward(
+                p, b["tokens"],
+                prefix_embed=b.get("prefix_embed"),
+                mode="train",
+                ctx_extra={"shard": cstr, "scan_unroll": scan_unroll},
+            )
+            return cross_entropy(logits, b["labels"])
+
+        loss, grads = accum(loss_fn, params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return BuiltStep(
+        fn=fn,
+        abstract_args=(abstract_params, abstract_opt, in_specs),
+        arg_shardings=(param_sh, opt_sh, batch_sh),
+        model=model,
+        meta={"moment_dtype": md, "kind": "train"},
+    )
+
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                  *, scan_unroll: int = 1,
+                  bfp_weights: bool = False) -> BuiltStep:
+    model = LMModel(cfg)
+    metas = model.param_meta()
+    if bfp_weights:
+        abstract_params = params_lib.bfp_abstract(metas)
+        param_sh = params_lib.bfp_shardings(metas, mesh)
+    else:
+        abstract_params = params_lib.abstract(metas)
+        param_sh = params_lib.shardings(metas, mesh)
+    in_specs = input_specs(cfg, shape)
+    batch_sh = shd.input_shardings(mesh, in_specs)
+    b = shape.global_batch
+    # VLM prefill: the vision prefix occupies cache slots too
+    max_len = shape.seq_len + (
+        cfg.frontend_len if cfg.family == "vlm" else 0
+    )
+    cache_metas = model.cache_meta(b, max_len)
+    cache_sh = params_lib.shardings(cache_metas, mesh)
+
+    cstr = shd.activation_constrainer(mesh, shape.global_batch)
+
+    def prefill(params, batch):
+        logits, cache = model.forward(
+            params, batch["tokens"],
+            prefix_embed=batch.get("prefix_embed"),
+            mode="serve", cache_out=True, max_len=max_len,
+            ctx_extra={"shard": cstr, "scan_unroll": scan_unroll},
+        )
+        # serving returns only the last-position logits + the filled cache
+        return logits[:, -1, :], cache
+
+    fn = jax.jit(
+        prefill,
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=(None, cache_sh),
+    )
+    return BuiltStep(
+        fn=fn,
+        abstract_args=(abstract_params, in_specs),
+        arg_shardings=(param_sh, batch_sh),
+        model=model,
+        meta={"kind": "prefill"},
+    )
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                     *, scan_unroll: int = 1,
+                     bfp_weights: bool = False) -> BuiltStep:
+    """Single-token decode against a seq_len-deep cache (decode shapes)."""
+    model = LMModel(cfg)
+    metas = model.param_meta()
+    if bfp_weights:
+        abstract_params = params_lib.bfp_abstract(metas)
+        param_sh = params_lib.bfp_shardings(metas, mesh)
+    else:
+        abstract_params = params_lib.abstract(metas)
+        param_sh = params_lib.shardings(metas, mesh)
+    b = shape.global_batch
+    cache_metas = model.cache_meta(b, shape.seq_len)
+    abstract_cache = params_lib.abstract(cache_metas)
+    cache_sh = params_lib.shardings(cache_metas, mesh)
+    in_specs = input_specs(cfg, shape)
+    tok_sh = shd.input_shardings(mesh, in_specs)
+
+    cstr = shd.activation_constrainer(mesh, shape.global_batch)
+
+    def serve_step(params, cache, tokens, cache_len):
+        logits, new_cache = model.decode_step(
+            params, tokens, cache, cache_len,
+            ctx_extra={"shard": cstr, "scan_unroll": scan_unroll},
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            param_sh, cache_sh, tok_sh["tokens"], NamedSharding(mesh, P())
+        ),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    return BuiltStep(
+        fn=fn,
+        abstract_args=(
+            abstract_params, abstract_cache, in_specs["tokens"],
+            in_specs["cache_len"],
+        ),
+        arg_shardings=(param_sh, cache_sh, tok_sh["tokens"], None),
+        model=model,
+        meta={"kind": "decode"},
+    )
+
+
+def build_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        kw.pop("bfp_weights", None)
+        return build_train_step(cfg, mesh, shape, **kw)
+    kw.pop("moment_dtype", None)
+    kw.pop("seq_shard", None)
+    kw.pop("n_micro", None)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,123 @@
+"""End-to-end training driver.
+
+Runs on whatever devices exist (CPU smoke -> TPU pod): builds the model
+from a config, sets up AdamW + schedule, deterministic data, async
+checkpointing, watchdog and preemption guard, then drives TrainRunner.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import TokenDataset
+    from repro.models.lm import LMModel, cross_entropy
+    from repro.optim import adamw, clip_by_global_norm, cosine_with_warmup
+    from repro.optim.grad_utils import (
+        GradAccumulator, error_feedback_compress, init_residual,
+    )
+    from repro.runtime.fault_tolerance import (
+        PreemptionGuard, TrainRunner, Watchdog,
+    )
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = LMModel(cfg)
+    ds = TokenDataset(cfg.vocab, args.seq, args.batch, seed=0)
+
+    opt_init, opt_update = adamw(
+        cosine_with_warmup(args.lr, 20, max(args.steps, 21)),
+        moment_dtype=args.moment_dtype, weight_decay=0.01,
+    )
+    accum = GradAccumulator(args.n_micro)
+
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.frontend != "none":
+            kw["prefix_embed"] = jnp.zeros(
+                (batch["tokens"].shape[0], cfg.frontend_len, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+        logits = model.forward(params, batch["tokens"], mode="train", **kw)
+        return cross_entropy(logits, batch["labels"])
+
+    @jax.jit
+    def step_fn(state, batch):
+        params, opt_state, residual = state
+        loss, grads = accum(loss_fn, params, batch)
+        if args.grad_compression:
+            grads, residual = error_feedback_compress(grads, residual)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt_update(grads, opt_state, params)
+        return (params, opt_state, residual), {"loss": loss,
+                                               "grad_norm": gnorm}
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = opt_init(params)
+    residual = init_residual(params) if args.grad_compression else jnp.zeros(())
+    state = (params, opt_state, residual)
+
+    ckpt_dir = args.ckpt_dir or os.path.join("/tmp", f"repro_{args.arch}")
+    cm = CheckpointManager(ckpt_dir, keep=3)
+    losses = []
+
+    def batch_fn(step):
+        return jax.tree_util.tree_map(jnp.asarray, ds.batch(step))
+
+    def wrapped_step(state, batch):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        return state, metrics
+
+    runner = TrainRunner(
+        wrapped_step, batch_fn, cm, ckpt_every=args.ckpt_every,
+        watchdog=Watchdog(), guard=PreemptionGuard(install=True),
+    )
+    start, state = runner.resume_or_init(state)
+    if start:
+        print(f"[train] resumed from step {start}")
+    t0 = time.time()
+    step, state, status = runner.run(state, start, args.steps - start,
+                                     fail_at=args.fail_at)
+    dt = time.time() - t0
+    logs = runner.metrics_log
+    for m in logs[:: max(args.log_every, 1)]:
+        print(f"[train] step {m['step']:5d} loss {m['loss']:.4f} "
+              f"dt {m['dt']*1e3:.0f}ms")
+    if logs:
+        print(f"[train] {status} at step {step}; final loss "
+              f"{logs[-1]['loss']:.4f}; {dt:.1f}s total; "
+              f"straggler incidents: {len(runner.watchdog.incidents)}")
+    return logs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model substrate: the paper's own FCN/STD family (models.fcn) and the
+ten assigned LM architectures (models.lm), all executed through the
+repro.core microcode engine."""

@@ -1,0 +1,10 @@
+"""The paper's own model family: instance-segmentation STD (PixelLink [6]
++ EAST [24] style U-shape FCN) with configurable backbones, assembled to
+microcode and executed by repro.core.FCNEngine."""
+from . import backbones, fusion, pixellink, postprocess
+from .pixellink import PixelLinkModel, STDLoss
+
+__all__ = [
+    "backbones", "fusion", "pixellink", "postprocess",
+    "PixelLinkModel", "STDLoss",
+]

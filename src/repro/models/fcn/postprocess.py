@@ -1,0 +1,168 @@
+"""Post-processing: positive pixels joined into Connected Components by
+positive links; each CC is a detected text box (paper §III.A / PixelLink).
+
+``cc_label`` is pure JAX (iterative max-label propagation in a while_loop
+— TPU-friendly, no host sync); ``cc_label_numpy`` is the union-find oracle
+used by the tests; ``boxes_from_labels`` extracts axis-aligned boxes on
+host for the serving pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# neighbor offsets, PixelLink's 8-connectivity, order: (dy, dx)
+NEIGHBORS: Tuple[Tuple[int, int], ...] = (
+    (-1, -1), (-1, 0), (-1, 1),
+    (0, -1),           (0, 1),
+    (1, -1), (1, 0), (1, 1),
+)
+
+
+def link_symmetrize(links: jax.Array) -> jax.Array:
+    """links (..., H, W, 8) -> OR with the reciprocal direction (PixelLink
+    joins two pixels if EITHER direction predicts a positive link)."""
+    rev = {0: 7, 1: 6, 2: 5, 3: 4, 4: 3, 5: 2, 6: 1, 7: 0}
+    outs = []
+    for d, (dy, dx) in enumerate(NEIGHBORS):
+        rd = rev[d]
+        nb = jnp.roll(links[..., rd], shift=(-dy, -dx), axis=(-2, -1))
+        outs.append(jnp.maximum(links[..., d], nb))
+    return jnp.stack(outs, axis=-1)
+
+
+def cc_label(
+    score: jax.Array,          # (H, W) probabilities
+    links: jax.Array,          # (H, W, 8)
+    score_thr: float = 0.5,
+    link_thr: float = 0.5,
+    max_iters: int = 256,
+) -> jax.Array:
+    """Label map (H, W) int32; 0 = background, labels = max linear index+1
+    within the component."""
+    H, W = score.shape
+    pos = score > score_thr
+    lnk = link_symmetrize(links) > link_thr
+    init = jnp.where(
+        pos, jnp.arange(1, H * W + 1, dtype=jnp.int32).reshape(H, W), 0
+    )
+
+    def spread(labels):
+        out = labels
+        for d, (dy, dx) in enumerate(NEIGHBORS):
+            # label of neighbor q = p + (dy, dx), viewed at p
+            shifted = jnp.roll(labels, shift=(-dy, -dx), axis=(0, 1))
+            # mask out wrap-around rows/cols
+            if dy == 1:
+                shifted = shifted.at[-1, :].set(0)
+            elif dy == -1:
+                shifted = shifted.at[0, :].set(0)
+            if dx == 1:
+                shifted = shifted.at[:, -1].set(0)
+            elif dx == -1:
+                shifted = shifted.at[:, 0].set(0)
+            take = lnk[..., d] & pos
+            out = jnp.where(take, jnp.maximum(out, shifted), out)
+        return jnp.where(pos, out, 0)
+
+    def cond(state):
+        labels, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        new = spread(labels)
+        return new, jnp.any(new != labels), it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True), 0))
+    return labels
+
+
+def cc_label_numpy(
+    score: np.ndarray, links: np.ndarray,
+    score_thr: float = 0.5, link_thr: float = 0.5,
+) -> np.ndarray:
+    """Union-find oracle with identical link semantics."""
+    H, W = score.shape
+    pos = score > score_thr
+    lnk = np.asarray(link_symmetrize(jnp.asarray(links))) > link_thr
+    parent = np.arange(H * W)
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+
+    for y in range(H):
+        for x in range(W):
+            if not pos[y, x]:
+                continue
+            for d, (dy, dx) in enumerate(NEIGHBORS):
+                ny, nx = y + dy, x + dx
+                if 0 <= ny < H and 0 <= nx < W and pos[ny, nx] and lnk[y, x, d]:
+                    union(y * W + x, ny * W + nx)
+    out = np.zeros((H, W), np.int32)
+    for y in range(H):
+        for x in range(W):
+            if pos[y, x]:
+                out[y, x] = find(y * W + x) + 1
+    return out
+
+
+def boxes_from_labels(labels: np.ndarray, min_area: int = 1) -> List[Dict]:
+    """Axis-aligned boxes per component (host-side, serving tail)."""
+    labels = np.asarray(labels)
+    out = []
+    for lab in np.unique(labels):
+        if lab == 0:
+            continue
+        ys, xs = np.nonzero(labels == lab)
+        if ys.size < min_area:
+            continue
+        out.append({
+            "label": int(lab),
+            "box": (int(xs.min()), int(ys.min()), int(xs.max()), int(ys.max())),
+            "area": int(ys.size),
+        })
+    return out
+
+
+def f_measure(
+    pred_boxes: List[Dict], gt_boxes: List[Tuple[int, int, int, int]],
+    iou_thr: float = 0.5,
+) -> Dict[str, float]:
+    """IoU-matched precision/recall/F (the paper's Table VI metrics)."""
+    def iou(a, b):
+        ax0, ay0, ax1, ay1 = a
+        bx0, by0, bx1, by1 = b
+        ix0, iy0 = max(ax0, bx0), max(ay0, by0)
+        ix1, iy1 = min(ax1, bx1), min(ay1, by1)
+        iw, ih = max(ix1 - ix0 + 1, 0), max(iy1 - iy0 + 1, 0)
+        inter = iw * ih
+        ua = (ax1 - ax0 + 1) * (ay1 - ay0 + 1)
+        ub = (bx1 - bx0 + 1) * (by1 - by0 + 1)
+        return inter / max(ua + ub - inter, 1)
+
+    matched_gt = set()
+    tp = 0
+    for pb in pred_boxes:
+        for gi, gb in enumerate(gt_boxes):
+            if gi in matched_gt:
+                continue
+            if iou(pb["box"], gb) >= iou_thr:
+                matched_gt.add(gi)
+                tp += 1
+                break
+    prec = tp / max(len(pred_boxes), 1)
+    rec = tp / max(len(gt_boxes), 1)
+    f = 2 * prec * rec / max(prec + rec, 1e-9)
+    return {"precision": prec, "recall": rec, "f_measure": f}

@@ -1,0 +1,9 @@
+"""LM model substrate: datapath modules (layers/moe/ssm) + microcode-driven
+stacks (transformer) for the ten assigned architectures."""
+from . import layers, moe, params, ssm, transformer
+from .transformer import LMModel, cross_entropy
+
+__all__ = [
+    "layers", "moe", "params", "ssm", "transformer", "LMModel",
+    "cross_entropy",
+]

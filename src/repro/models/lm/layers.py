@@ -1,0 +1,420 @@
+"""LM datapath modules — the transformer analogue of the paper's fixed
+compute units (conv / pool / upsample), dispatched by microcode ExtOps.
+
+Every module is ``fn(params, x, *, mc, table, ctx) -> y``:
+  * hyperparameters come from the microcode side-table (paper C1: models
+    are configured, not coded),
+  * ``ctx`` carries step state (positions, KV cache, prefix memory),
+  * all matmuls run ``preferred_element_type=f32`` — the §IV.C wide-
+    accumulator discipline — with optional BFP input quantization (C2).
+
+Shapes are (B, L, D) throughout; decode is the L=1 case with a cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfp as bfp_lib
+from repro.core.microcode import ExtOp
+
+from .params import ParamMeta
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _maybe_bfp(x: jax.Array, table: Dict[str, Any], axis: int = -1):
+    """Paper C2: quantize matmul inputs to shared-exponent blocks."""
+    if table.get("bfp"):
+        return bfp_lib.roundtrip(
+            x.astype(F32),
+            block_size=table.get("bfp_block", 32),
+            mantissa_bits=table.get("bfp_mantissa", 10),
+            axis=axis,
+        )
+    return x
+
+
+def dot(x, w, table: Optional[Dict[str, Any]] = None):
+    """x @ w with f32 accumulation (+ optional BFP input quantization)."""
+    table = table or {}
+    x = _maybe_bfp(x, table)
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        ((((x.ndim - 1),), (0,)), ((), ())),
+        preferred_element_type=F32,
+    )
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (B, L, H, hd), positions: (B, L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=F32) / half
+    )                                            # (half,)
+    ang = positions.astype(F32)[..., None] * freqs   # (B, L, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_meta(d: int, dtype) -> Dict[str, ParamMeta]:
+    return {"scale": ParamMeta((d,), dtype, init="ones")}
+
+
+def rmsnorm(p, x, *, mc=None, table=None, ctx=None):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def layernorm_meta(d: int, dtype) -> Dict[str, ParamMeta]:
+    return {
+        "scale": ParamMeta((d,), dtype, init="ones"),
+        "bias": ParamMeta((d,), dtype, init="zeros"),
+    }
+
+
+def layernorm(p, x, *, mc=None, table=None, ctx=None):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y * p["scale"].astype(F32) + p["bias"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def embed_meta(vocab: int, d: int, dtype) -> Dict[str, ParamMeta]:
+    return {
+        "table": ParamMeta(
+            (vocab, d), dtype, init="normal", scale=0.02,
+            prefs=((0, "model"), (1, "data")),
+        )
+    }
+
+
+def embed(p, tokens, *, mc=None, table=None, ctx=None):
+    dtype = jnp.dtype(table.get("compute_dtype", "bfloat16")) if table else jnp.bfloat16
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def lm_head_meta(d: int, vocab: int, dtype) -> Dict[str, ParamMeta]:
+    return {
+        "w": ParamMeta(
+            (d, vocab), dtype, init="scaled",
+            prefs=((1, "model"), (0, "data")),
+        )
+    }
+
+
+def lm_head(p, x, *, mc=None, table=None, ctx=None):
+    return dot(x, p["w"], table)       # f32 logits
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + RoPE; self or cross; full / decode-with-cache)
+# ---------------------------------------------------------------------------
+
+def attention_meta(
+    d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype,
+    qkv_bias: bool = False,
+) -> Dict[str, ParamMeta]:
+    m = {
+        "wq": ParamMeta(
+            (d_model, n_heads, head_dim), dtype, init="scaled",
+            prefs=((1, "model"), (0, "data")),
+        ),
+        "wk": ParamMeta(
+            (d_model, n_kv, head_dim), dtype, init="scaled",
+            prefs=((1, "model"), (0, "data")),
+        ),
+        "wv": ParamMeta(
+            (d_model, n_kv, head_dim), dtype, init="scaled",
+            prefs=((1, "model"), (0, "data")),
+        ),
+        "wo": ParamMeta(
+            (n_heads, head_dim, d_model), dtype, init="scaled",
+            prefs=((0, "model"), (2, "data")),
+        ),
+    }
+    if qkv_bias:
+        m["bq"] = ParamMeta((n_heads, head_dim), dtype, init="zeros")
+        m["bk"] = ParamMeta((n_kv, head_dim), dtype, init="zeros")
+        m["bv"] = ParamMeta((n_kv, head_dim), dtype, init="zeros")
+    return m
+
+
+def _proj_qkv(p, x, table):
+    q = jnp.einsum(
+        "bld,dhk->blhk", _maybe_bfp(x, table), p["wq"].astype(x.dtype),
+        preferred_element_type=F32,
+    )
+    k = jnp.einsum(
+        "bld,dhk->blhk", _maybe_bfp(x, table), p["wk"].astype(x.dtype),
+        preferred_element_type=F32,
+    )
+    v = jnp.einsum(
+        "bld,dhk->blhk", _maybe_bfp(x, table), p["wv"].astype(x.dtype),
+        preferred_element_type=F32,
+    )
+    if "bq" in p:
+        q = q + p["bq"].astype(F32)
+        k = k + p["bk"].astype(F32)
+        v = v + p["bv"].astype(F32)
+    return q, k, v
+
+
+def _sdpa_full(q, k, v, *, causal: bool, ctx) -> jax.Array:
+    """(B, L, H, hd) x (B, S, K, hd) dense attention with GQA broadcast.
+
+    Two memory disciplines (found via the dry-run §Perf loop):
+      * KV heads are repeated to H (not q reshaped to (K, g)) so the head
+        dim stays shardable over "model" — the (K, g) reshape silently
+        replicated the score tensor across the TP axis;
+      * queries are processed in chunks via lax.scan (flash-lite): only
+        one (B, H, chunk, S) score block is ever live, bounding the
+        activation peak at any sequence length.
+    """
+    B, L, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    g = H // K
+    kf = jnp.repeat(k, g, axis=2) if g > 1 else k     # (B, S, H, hd)
+    vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+    cstr = (ctx or {}).get("shard")
+    if cstr is not None:
+        q = cstr(q, "blhd")
+        kf = cstr(kf, "blhd")
+        vf = cstr(vf, "blhd")
+    scale = hd ** -0.5
+    chunk = int((ctx or {}).get("q_chunk", 1024))
+    chunk = min(chunk, L)
+
+    def attend(qc, row0):
+        s = jnp.einsum("blhd,bshd->bhls", qc, kf,
+                       preferred_element_type=F32) * scale
+        if causal:
+            rows = row0 + jnp.arange(qc.shape[1])[:, None]
+            cols = jnp.arange(S)[None, :]
+            s = jnp.where((cols <= rows + (S - L))[None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhls,bshd->blhd", pr, vf,
+                          preferred_element_type=F32).astype(qc.dtype)
+
+    if L <= chunk:
+        return attend(q, 0)
+    pad = (-L) % chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    nch = qp.shape[1] // chunk
+    qs = jnp.moveaxis(qp.reshape(B, nch, chunk, H, hd), 1, 0)
+
+    def body(_, inp):
+        qc, i = inp
+        return None, attend(qc, i * chunk)
+
+    # analysis mode (scan_unroll > 1) unrolls so cost_analysis sees every
+    # chunk (while bodies are otherwise counted once)
+    unroll = nch if int((ctx or {}).get("scan_unroll", 1)) > 1 else 1
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nch)), unroll=unroll)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nch * chunk, H, hd)
+    return out[:, :L]
+
+
+def _kv_write(cache, k, v, pos):
+    """Write K/V at pos; quantizes to int8 + per-vector scale when the
+    cache is int8 (paper C2 on the *decode-dominant* stream: the KV cache
+    — the §Perf cell-C finding that weights are not the decode bottleneck
+    at high sharding degrees)."""
+    if cache["k"].dtype == jnp.int8:
+        def q(t):
+            s = jnp.max(jnp.abs(t.astype(F32)), -1, keepdims=True) / 127.0
+            s = jnp.maximum(s, 1e-8)
+            return jnp.round(t.astype(F32) / s).astype(jnp.int8), \
+                s[..., 0].astype(jnp.float16)
+        kq, ks = q(k)
+        vq, vs = q(v)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, pos, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, pos, 0)),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)),
+    }
+
+
+def _kv_read(cache, dtype):
+    if cache["k"].dtype == jnp.int8:
+        k = cache["k"].astype(F32) * cache["k_scale"].astype(F32)[..., None]
+        v = cache["v"].astype(F32) * cache["v_scale"].astype(F32)[..., None]
+        return k.astype(dtype), v.astype(dtype)
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+def attention(p, x, *, mc=None, table=None, ctx=None):
+    """Self-attention.  table: n_heads, n_kv, head_dim, rope_theta, causal.
+    ctx: positions (B, L); mode 'full' | 'decode'; cache {k, v} (B, S, K, hd);
+    cache_len scalar; use_flash bool."""
+    table = table or {}
+    ctx = ctx or {}
+    theta = table.get("rope_theta", 10000.0)
+    q, k, v = _proj_qkv(p, x, table)
+    positions = ctx.get("positions")
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    if table.get("rope", True):
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    q = q.astype(x.dtype)
+    k = k.astype(x.dtype)
+    v = v.astype(x.dtype)
+
+    mode = ctx.get("mode", "full")
+    if mode == "decode":
+        cache = ctx["cache"]
+        pos = ctx["cache_len"]                    # scalar int32
+        ctx["cache"] = _kv_write(cache, k, v, pos)
+        kc, vc = _kv_read(ctx["cache"], q.dtype)
+        from repro.kernels.flash_attention.ops import decode_attention
+
+        o = decode_attention(
+            jnp.swapaxes(q, 1, 2),                # (B, H, 1, hd)
+            jnp.swapaxes(kc, 1, 2),
+            jnp.swapaxes(vc, 1, 2),
+            pos + 1,
+        )
+        o = jnp.swapaxes(o, 1, 2)                 # (B, 1, H, hd)
+    else:
+        if "cache" in ctx:
+            # prefill: write the full-sequence K/V into the cache so decode
+            # can continue from here
+            ctx["cache"] = _kv_write(ctx["cache"], k, v,
+                                     ctx.get("cache_len", 0))
+        if ctx.get("use_flash"):
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            o = flash_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2),
+                causal=table.get("causal", True),
+                interpret=bool(ctx.get("interpret", True)),
+            )
+            o = jnp.swapaxes(o, 1, 2)
+        else:
+            o = _sdpa_full(q, k, v, causal=table.get("causal", True), ctx=ctx)
+    out = jnp.einsum(
+        "blhd,hdm->blm", o.astype(x.dtype), p["wo"].astype(x.dtype),
+        preferred_element_type=F32,
+    ).astype(x.dtype)
+    if ctx.get("shard") is not None:
+        out = ctx["shard"](out, "bld")
+    return out
+
+
+def cross_attention(p, x, *, mc=None, table=None, ctx=None):
+    """Cross-attention against ctx['memory'] (B, S, D_mem->proj'd)."""
+    table = dict(table or {})
+    table["rope"] = False
+    table["causal"] = False
+    ctx = ctx or {}
+    mem = ctx["memory"]
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype),
+                   preferred_element_type=F32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", mem.astype(x.dtype),
+                   p["wk"].astype(x.dtype),
+                   preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", mem.astype(x.dtype),
+                   p["wv"].astype(x.dtype),
+                   preferred_element_type=F32).astype(x.dtype)
+    o = _sdpa_full(q, k, v, causal=False, ctx=ctx)
+    return jnp.einsum(
+        "blhd,hdm->blm", o.astype(x.dtype), p["wo"].astype(x.dtype),
+        preferred_element_type=F32,
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def glu_mlp_meta(d: int, f: int, dtype) -> Dict[str, ParamMeta]:
+    return {
+        "wg": ParamMeta((d, f), dtype, init="scaled",
+                        prefs=((1, "model"), (0, "data"))),
+        "wu": ParamMeta((d, f), dtype, init="scaled",
+                        prefs=((1, "model"), (0, "data"))),
+        "wd": ParamMeta((f, d), dtype, init="scaled",
+                        prefs=((0, "model"), (1, "data"))),
+    }
+
+
+def glu_mlp(p, x, *, mc=None, table=None, ctx=None):
+    g = dot(x, p["wg"], table)
+    u = dot(x, p["wu"], table)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return dot(h, p["wd"], table).astype(x.dtype)
+
+
+def mlp_meta(d: int, f: int, dtype) -> Dict[str, ParamMeta]:
+    return {
+        "w1": ParamMeta((d, f), dtype, init="scaled",
+                        prefs=((1, "model"), (0, "data"))),
+        "b1": ParamMeta((f,), dtype, init="zeros"),
+        "w2": ParamMeta((f, d), dtype, init="scaled",
+                        prefs=((0, "model"), (1, "data"))),
+        "b2": ParamMeta((d,), dtype, init="zeros"),
+    }
+
+
+def mlp(p, x, *, mc=None, table=None, ctx=None):
+    h = jax.nn.gelu(dot(x, p["w1"], table) + p["b1"].astype(F32))
+    return (
+        dot(h.astype(x.dtype), p["w2"], table) + p["b2"].astype(F32)
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry — the interpreter's dispatch table
+# ---------------------------------------------------------------------------
+
+def registry() -> Dict[ExtOp, Any]:
+    from . import moe as moe_mod
+    from . import ssm as ssm_mod
+
+    return {
+        ExtOp.RMSNORM: rmsnorm,
+        ExtOp.LAYERNORM: layernorm,
+        ExtOp.ATTN: attention,
+        ExtOp.CROSS_ATTN: cross_attention,
+        ExtOp.GLU_MLP: glu_mlp,
+        ExtOp.MLP: mlp,
+        ExtOp.MOE: moe_mod.moe,
+        ExtOp.SSD: ssm_mod.mamba2_block,
+        ExtOp.EMBED: embed,
+        ExtOp.LM_HEAD: lm_head,
+    }

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts datapath module (grok-1 8e/top-2, kimi-k2 384e/top-8).
+
+Capacity-bounded dispatch with **sort-based ranking**: the usual one-hot
+cumsum rank computation is O(T*k*E) memory — at kimi-k2 prefill scale
+(1M tokens x 384 experts) that is terabytes.  Ranking via a stable argsort
+of expert ids is O(T*k): at 8M (token,slot) pairs it is ~32 MB.  Dispatch/
+combine are gathers/scatters, which the SPMD partitioner lowers to the
+expert all-to-all when experts are sharded.
+
+Compute scales with ``tokens * top_k * capacity_factor`` (active FLOPs),
+never with n_experts.
+
+Sharding: experts dim over "model" when divisible (kimi: 384 % 16 == 0 ->
+true EP); otherwise d_ff picks up "model" (grok: 8 experts < 16 devices ->
+expert-TP).  Declared in ParamMeta prefs, resolved per-mesh (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _maybe_bfp
+from .params import ParamMeta
+
+F32 = jnp.float32
+
+
+def moe_meta(d: int, f: int, n_experts: int, dtype,
+             fission: int = 1) -> Dict[str, ParamMeta]:
+    """``fission`` r > 1 splits every expert's FFN into r slices along
+    d_ff, giving E*r virtual experts of width f/r.  Mathematically
+    identical (gate/up are elementwise per f-slice; down-proj partial sums
+    add), but E*r can divide the "model" axis when E cannot — it turns
+    grok's 8-expert expert-TP (layer-wise psum of activation-sized
+    partials) into true EP (dispatch/combine only).  §Perf cell B."""
+    E = n_experts * fission
+    fs = f // fission
+    assert f % fission == 0
+    return {
+        "router": ParamMeta((d, n_experts), dtype, init="scaled"),
+        "wg": ParamMeta((E, d, fs), dtype, init="scaled",
+                        prefs=((0, "model"), (2, "model"), (1, "data"))),
+        "wu": ParamMeta((E, d, fs), dtype, init="scaled",
+                        prefs=((0, "model"), (2, "model"), (1, "data"))),
+        "wd": ParamMeta((E, fs, d), dtype, init="scaled",
+                        prefs=((0, "model"), (1, "model"), (2, "data"))),
+    }
+
+
+def _ranks_by_sort(expert_of: jax.Array, n_experts: int) -> jax.Array:
+    """rank of each element within its expert, via stable sort — O(T*k)."""
+    n = expert_of.shape[0]
+    order = jnp.argsort(expert_of, stable=True)
+    sorted_e = expert_of[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[expert_of].add(1)
+    starts = jnp.cumsum(counts) - counts               # exclusive cumsum
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+
+def moe(p, x, *, mc=None, table=None, ctx=None):
+    """x: (B, L, D).  table: n_experts, top_k, capacity_factor."""
+    table = table or {}
+    E = int(table["n_experts"])
+    k = int(table["top_k"])
+    cf = float(table.get("capacity_factor", 1.25))
+    B, L, D = x.shape
+    T = B * L
+    xt = x.reshape(T, D)
+
+    gates = jnp.einsum(
+        "td,de->te", xt.astype(F32), p["router"].astype(F32)
+    )                                                  # (T, E)
+    probs = jax.nn.softmax(gates, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)               # (T, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    r = int(table.get("fission", 1))
+    if r > 1:                # expert fission: slot per d_ff slice
+        topi = (topi[..., None] * r
+                + jnp.arange(r, dtype=topi.dtype)).reshape(T, k * r)
+        topv = jnp.repeat(topv, r, axis=-1)            # same gate weight
+        k = k * r
+        E = E * r
+
+    cap = max(int(T * k * cf) // E, 4)
+    expert_of = topi.reshape(-1).astype(jnp.int32)     # (T*k,)
+    pos = _ranks_by_sort(expert_of, E)                 # (T*k,)
+    keep = pos < cap
+    tok_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    slot = expert_of * cap + pos                       # in [0, E*cap)
+    slot = jnp.where(keep, slot, E * cap)              # overflow cell
+
+    # dispatch: gather tokens into (E, cap, D) expert buffers
+    buf_tok = jnp.zeros((E * cap + 1,), jnp.int32).at[slot].set(tok_of)
+    buf_valid = jnp.zeros((E * cap + 1,), jnp.bool_).at[slot].set(keep)
+    xe = (
+        jnp.take(xt, buf_tok[: E * cap], axis=0)
+        * buf_valid[: E * cap, None].astype(x.dtype)
+    ).reshape(E, cap, D)
+    cstr = (ctx or {}).get("shard")
+    if cstr is not None:
+        xe = cstr(xe, "ecd")      # EP layout: experts over "model"
+
+    # expert FFN (SwiGLU), batched over experts — the EP matmuls
+    xq = _maybe_bfp(xe, table)
+    g = jnp.einsum("ecd,edf->ecf", xq, p["wg"].astype(x.dtype),
+                   preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", xq, p["wu"].astype(x.dtype),
+                   preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", _maybe_bfp(h, table),
+                    p["wd"].astype(x.dtype),
+                    preferred_element_type=F32)        # (E, cap, D)
+
+    # combine: each (token, slot) reads back its expert/cap cell
+    ye_flat = ye.reshape(E * cap, D)
+    back = jnp.take(ye_flat, jnp.minimum(slot, E * cap - 1), axis=0)
+    back = back * keep[:, None].astype(back.dtype)
+    back = back.reshape(T, k, D) * topv[..., None]
+    out = jnp.sum(back, axis=1)
+    return out.reshape(B, L, D).astype(x.dtype)
+
+
+def aux_load_loss(p, x, *, table=None) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (importance * load)."""
+    table = table or {}
+    E = int(table["n_experts"])
+    k = int(table["top_k"])
+    B, L, D = x.shape
+    xt = x.reshape(B * L, D)
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", xt.astype(F32), p["router"].astype(F32)),
+        axis=-1,
+    )
+    _, topi = jax.lax.top_k(gates, k)
+    load = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, E, dtype=F32), axis=1), axis=0
+    )
+    importance = jnp.mean(gates, axis=0)
+    return jnp.sum(load * importance) * E

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) datapath module — zamba2-2.7b and mamba2-370m.
+
+Block layout follows arXiv:2405.21060:
+    in_proj -> [z | x | B | C | dt]
+    causal conv1d (width 4) over [x | B | C], silu
+    dt = softplus(dt + dt_bias);  A = -exp(A_log)
+    y  = SSD(x, dt, A, B, C, D)          (kernels/ssd_scan)
+    y  = RMSNorm(y * silu(z)) -> out_proj
+
+Decode carries (conv_state, ssm_state) in the cache — O(1) per token,
+which is what makes the long_500k shape runnable for the SSM/hybrid archs
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd_decode_step, ssd_scan
+
+from .layers import _maybe_bfp, rmsnorm
+from .params import ParamMeta
+
+F32 = jnp.float32
+
+
+def mamba2_meta(
+    d_model: int, d_inner: int, n_heads: int, n_groups: int, d_state: int,
+    conv_width: int, dtype,
+) -> Dict[str, ParamMeta]:
+    d_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    d_conv = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": ParamMeta(
+            (d_model, d_proj), dtype, init="scaled",
+            prefs=((1, "model"), (0, "data")),
+        ),
+        "conv_w": ParamMeta((conv_width, d_conv), dtype, init="scaled"),
+        "conv_b": ParamMeta((d_conv,), dtype, init="zeros"),
+        "dt_bias": ParamMeta((n_heads,), F32, init="zeros"),
+        "A_log": ParamMeta((n_heads,), F32, init="zeros"),
+        "D": ParamMeta((n_heads,), F32, init="ones"),
+        "norm_scale": ParamMeta((d_inner,), dtype, init="ones"),
+        "out_proj": ParamMeta(
+            (d_inner, d_model), dtype, init="scaled",
+            prefs=((0, "model"), (1, "data")),
+        ),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    gs = n_groups * d_state
+    z = zxbcdt[..., :d_inner]
+    xc = zxbcdt[..., d_inner: 2 * d_inner + 2 * gs]   # conv'd chunk [x|B|C]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gs:]
+    return z, xc, dt
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv1d; xc: (B, L, C), w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xc, dtype=F32)
+    for i in range(W):
+        out = out + pad[:, i: i + xc.shape[1], :].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(out + b.astype(F32)).astype(xc.dtype)
+
+
+def mamba2_block(p, x, *, mc=None, table=None, ctx=None):
+    """x: (B, L, D).  table: d_inner, n_heads, n_groups, d_state, headdim,
+    conv_width, chunk.  ctx mode 'full' | 'decode' (cache: conv_state
+    (B, W-1, d_conv), ssm_state (B, H, P, N))."""
+    table = table or {}
+    ctx = ctx or {}
+    d_inner = int(table["d_inner"])
+    H = int(table["n_heads"])
+    G = int(table["n_groups"])
+    N = int(table["d_state"])
+    P = int(table["headdim"])
+    Wd = int(table.get("conv_width", 4))
+    chunk = int(table.get("chunk", 128))
+    Bsz, L, Dm = x.shape
+    gs = G * N
+
+    zxbcdt = jnp.einsum(
+        "bld,dp->blp", _maybe_bfp(x, table), p["in_proj"].astype(x.dtype),
+        preferred_element_type=F32,
+    ).astype(x.dtype)
+    z, xc, dt_raw = _split_proj(zxbcdt, d_inner, G, N, H)
+
+    mode = ctx.get("mode", "full")
+    if mode == "decode":
+        # conv state: (B, W-1, d_conv) of previous raw xc inputs
+        conv_state = ctx["cache"]["conv"]
+        hist = jnp.concatenate([conv_state, xc], axis=1)  # (B, W, d_conv)
+        ctx_new_conv = hist[:, 1:, :]
+        acc = jnp.zeros(xc.shape, F32)
+        for i in range(Wd):
+            acc = acc + hist[:, i: i + 1, :].astype(F32) * p["conv_w"][i].astype(F32)
+        xc = jax.nn.silu(acc + p["conv_b"].astype(F32)).astype(x.dtype)
+    else:
+        xc = _causal_conv(xc, p["conv_w"], p["conv_b"])
+
+    xs = xc[..., :d_inner]
+    Bm = xc[..., d_inner: d_inner + gs].reshape(Bsz, L, G, N)
+    Cm = xc[..., d_inner + gs:].reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(F32))
+    xh = xs.reshape(Bsz, L, H, P)
+
+    if mode == "decode":
+        h = ctx["cache"]["ssm"]                        # (B, H, P, N)
+        h_new, y = ssd_decode_step(
+            h, xh[:, 0].astype(F32), dt[:, 0], A,
+            Bm[:, 0].astype(F32), Cm[:, 0].astype(F32), p["D"],
+        )
+        ctx["cache"] = {"conv": ctx_new_conv, "ssm": h_new}
+        y = y[:, None, :, :]                           # (B, 1, H, P)
+    else:
+        want_state = "cache" in ctx
+        if ctx.get("use_kernel") and not want_state:
+            y = ssd_scan(
+                xh, dt, A, Bm, Cm, p["D"],
+                chunk=min(chunk, L),
+                interpret=bool(ctx.get("interpret", True)),
+            )
+        else:
+            y, h_last = _ssd_xla(
+                xh, dt, A, Bm, Cm, p["D"], chunk=min(chunk, L),
+                return_state=True,
+            )
+            if want_state:
+                # prefill: stash conv tail (pre-activation inputs) + final
+                # SSM state so decode can continue
+                conv_tail = zxbcdt[..., d_inner: 2 * d_inner + 2 * gs][
+                    :, L - (Wd - 1):, :
+                ]
+                ctx["cache"] = {
+                    "conv": conv_tail.astype(ctx["cache"]["conv"].dtype),
+                    "ssm": h_last,
+                }
+
+    y = y.reshape(Bsz, L, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    y = rmsnorm({"scale": p["norm_scale"]}, y)
+    return jnp.einsum(
+        "bli,id->bld", _maybe_bfp(y, table), p["out_proj"].astype(x.dtype),
+        preferred_element_type=F32,
+    ).astype(x.dtype)
+
+
+def _ssd_xla(x, dt, A, Bm, Cm, D, *, chunk: int, return_state: bool = False):
+    """Pure-XLA chunked SSD (same math as the Pallas kernel, for paths
+    where interpret-mode would be too slow or the dry-run lowers for a
+    non-TPU backend)."""
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    nc = L // chunk
+    xf = x.astype(F32)
+    dtf = dt.astype(F32)
+    la = (dtf * A[None, None, :]).reshape(Bsz, nc, chunk, H)
+    scum = jnp.cumsum(la, axis=2)
+    xdt = (xf * dtf[..., None]).reshape(Bsz, nc, chunk, H, P)
+    Bc = jnp.repeat(
+        Bm.reshape(Bsz, nc, chunk, G, N).astype(F32), hpg, axis=3
+    )
+    Cc = jnp.repeat(
+        Cm.reshape(Bsz, nc, chunk, G, N).astype(F32), hpg, axis=3
+    )
+    cb = jnp.einsum("bcthn,bcshn->bchts", Cc, Bc)
+    sc_h = scum.transpose(0, 1, 3, 2)                  # (B, nc, H, T)
+    arg = sc_h[:, :, :, :, None] - sc_h[:, :, :, None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the exponent (not the product): t<s entries are exp(+large) and
+    # would overflow to inf before a post-hoc where
+    dec = jnp.exp(jnp.where(tri[None, None, None], arg, -jnp.inf))
+    w = cb * dec
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", w, xdt)
+
+    s_last = scum[:, :, -1, :]                         # (B, nc, H)
+    bw = Bc * jnp.exp(s_last[:, :, None, :] - scum)[..., None]
+    st = jnp.einsum("bcthp,bcthn->bchpn", xdt, bw)
+
+    def carry(h, inp):
+        st_c, dec_c = inp
+        h_out = h
+        h = h * dec_c[..., None, None] + st_c
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, P, N), F32)
+    h_final, h_in = jax.lax.scan(
+        carry, h0,
+        (jnp.moveaxis(st, 1, 0), jnp.moveaxis(jnp.exp(s_last), 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)
+    y_inter = jnp.einsum(
+        "bcthn,bchpn->bcthp", Cc * jnp.exp(scum)[..., None], h_in
+    )
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    y = y + xf * D[None, None, :, None]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def init_ssm_cache(batch: int, table: Dict[str, Any], dtype) -> Dict[str, Any]:
+    d_conv = int(table["d_inner"]) + 2 * int(table["n_groups"]) * int(table["d_state"])
+    return {
+        "conv": jnp.zeros(
+            (batch, int(table.get("conv_width", 4)) - 1, d_conv), dtype
+        ),
+        "ssm": jnp.zeros(
+            (
+                batch,
+                int(table["n_heads"]),
+                int(table["headdim"]),
+                int(table["d_state"]),
+            ),
+            F32,
+        ),
+    }

@@ -1,0 +1,535 @@
+"""LM model assembly — configs compile to microcode programs (paper C1),
+executed by ``repro.core.interpreter.build_stream_fn`` over the datapath
+module registry, scanned over layers.
+
+One engine, ten architectures:
+  dense   : [id.cache, norm, attn.add, id.cache, norm, glu_mlp.add] x L
+  moe     : same with MOE in the MLP slot
+  ssm     : [id.cache, norm, ssd.add] x L                  (mamba2)
+  hybrid  : ssm blocks + a SHARED attention block every k layers —
+            weight sharing is microcode address reuse: the shared block's
+            words carry the same binding name at every call site (zamba2)
+  audio   : encoder (non-causal) + decoder with cross-attn    (whisper)
+  vlm     : vision-stub prefix embeddings + dense decoder   (internvl)
+
+The transformer residual is literally the paper's Fig. 3 res_op
+mechanism: IDENTITY(res=cache) ... BLOCK(res=add).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.interpreter import build_stream_fn
+from repro.core.microcode import ExtOp, Microcode, ResOp
+
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .params import ParamMeta, abstract, is_meta, materialize, tree_map_meta
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# microcode emission helpers
+# ---------------------------------------------------------------------------
+
+def _word(op: ExtOp, *, res: ResOp = ResOp.NONE, tbl: int = 0,
+          d_in: int = 0, d_out: int = 0, seq: int = 0) -> Microcode:
+    return Microcode(
+        layer_type=3,
+        in_ch=min(d_in, (1 << 16) - 1),
+        out_ch=min(d_out, (1 << 16) - 1),
+        height=min(seq, (1 << 20) - 1),
+        res_op=int(res),
+        ext_opcode=int(op),
+        ext_table_idx=tbl,
+    )
+
+
+@dataclasses.dataclass
+class Stream:
+    """A microcode segment + its tables and parameter bindings."""
+
+    words: List[Microcode]
+    tables: List[Dict[str, Any]]
+    bindings: Dict[int, str]
+    metas: Dict[str, Any]            # binding name -> ParamMeta tree
+
+    def fn(self):
+        return build_stream_fn(
+            self.words, self.tables, L.registry(), self.bindings
+        )
+
+
+class StreamBuilder:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.words: List[Microcode] = []
+        self.tables: List[Dict[str, Any]] = []
+        self.bindings: Dict[int, str] = {}
+        self.metas: Dict[str, Any] = {}
+
+    def table(self, **kw) -> int:
+        self.tables.append(kw)
+        return len(self.tables)
+
+    def emit(self, op: ExtOp, name: Optional[str] = None,
+             meta: Optional[Any] = None, *, res: ResOp = ResOp.NONE,
+             tbl: int = 0):
+        idx = len(self.words)
+        self.words.append(
+            _word(op, res=res, tbl=tbl, d_in=self.cfg.d_model,
+                  d_out=self.cfg.d_model)
+        )
+        if name is not None:
+            self.bindings[idx] = name
+            if meta is not None and name not in self.metas:
+                self.metas[name] = meta
+
+    def build(self) -> Stream:
+        return Stream(self.words, self.tables, self.bindings, self.metas)
+
+
+def _norm_parts(cfg: ArchConfig):
+    if cfg.norm == "rmsnorm":
+        return ExtOp.RMSNORM, L.rmsnorm_meta(cfg.d_model, cfg.param_dtype)
+    return ExtOp.LAYERNORM, L.layernorm_meta(cfg.d_model, cfg.param_dtype)
+
+
+def _common_tables(cfg: ArchConfig) -> Dict[str, Any]:
+    t: Dict[str, Any] = {"compute_dtype": cfg.compute_dtype}
+    if cfg.bfp_forward:
+        t.update(bfp=True, bfp_block=cfg.bfp_block,
+                 bfp_mantissa=cfg.bfp_mantissa)
+    return t
+
+
+def attn_block_stream(cfg: ArchConfig, *, causal=True, cross=False,
+                      prefix="") -> Stream:
+    """[id.cache, norm, attn.add] (+ optional cross-attn) + mlp sub-block."""
+    b = StreamBuilder(cfg)
+    nop, nmeta = _norm_parts(cfg)
+    attn_tbl = b.table(
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, causal=causal, rope=True,
+        **_common_tables(cfg),
+    )
+    mlp_tbl = b.table(**_common_tables(cfg))
+    amet = L.attention_meta(
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+        cfg.param_dtype, qkv_bias=cfg.qkv_bias,
+    )
+    b.emit(ExtOp.IDENTITY, res=ResOp.CACHE)
+    b.emit(nop, f"{prefix}attn_norm", nmeta)
+    b.emit(ExtOp.ATTN, f"{prefix}attn", amet, res=ResOp.ADD, tbl=attn_tbl)
+    if cross:
+        xmet = L.attention_meta(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.param_dtype
+        )
+        b.emit(ExtOp.IDENTITY, res=ResOp.CACHE)
+        b.emit(nop, f"{prefix}xattn_norm", nmeta)
+        b.emit(ExtOp.CROSS_ATTN, f"{prefix}xattn", xmet, res=ResOp.ADD,
+               tbl=attn_tbl)
+    b.emit(ExtOp.IDENTITY, res=ResOp.CACHE)
+    b.emit(nop, f"{prefix}mlp_norm", nmeta)
+    if cfg.family == "moe" and not cross and not prefix:
+        moe_tbl = b.table(
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, fission=cfg.moe_fission,
+            **_common_tables(cfg),
+        )
+        b.emit(
+            ExtOp.MOE, "moe",
+            moe_mod.moe_meta(cfg.d_model, cfg.d_ff, cfg.n_experts,
+                             cfg.param_dtype, fission=cfg.moe_fission),
+            res=ResOp.ADD, tbl=moe_tbl,
+        )
+    elif cfg.act == "swiglu":
+        b.emit(ExtOp.GLU_MLP, f"{prefix}mlp",
+               L.glu_mlp_meta(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+               res=ResOp.ADD, tbl=mlp_tbl)
+    else:
+        b.emit(ExtOp.MLP, f"{prefix}mlp",
+               L.mlp_meta(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+               res=ResOp.ADD, tbl=mlp_tbl)
+    return b.build()
+
+
+def ssm_block_stream(cfg: ArchConfig, prefix="") -> Stream:
+    b = StreamBuilder(cfg)
+    nop, nmeta = _norm_parts(cfg)
+    tbl = b.table(
+        d_inner=cfg.d_inner, n_heads=cfg.ssm_heads, n_groups=cfg.ssm_groups,
+        d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+        conv_width=cfg.conv_width, chunk=cfg.ssm_chunk,
+        **_common_tables(cfg),
+    )
+    met = ssm_mod.mamba2_meta(
+        cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_groups,
+        cfg.ssm_state, cfg.conv_width, cfg.param_dtype,
+    )
+    b.emit(ExtOp.IDENTITY, res=ResOp.CACHE)
+    b.emit(nop, f"{prefix}ssm_norm", nmeta)
+    b.emit(ExtOp.SSD, f"{prefix}ssm", met, res=ResOp.ADD, tbl=tbl)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+def _stack_meta(meta_tree, n: int):
+    """Prepend a stacked layer dim to every ParamMeta (for lax.scan)."""
+    def stack(m: ParamMeta) -> ParamMeta:
+        prefs = tuple((d + 1, a) for d, a in m.prefs)
+        return ParamMeta((n,) + m.shape, m.dtype, m.init, m.scale, prefs,
+                         m.custom_init)
+    return tree_map_meta(stack, meta_tree)
+
+
+class LMModel:
+    """Config-driven LM; all blocks execute through microcode streams."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            self.block = attn_block_stream(cfg)
+            self.block_kind = "attn"
+        elif cfg.family == "ssm":
+            self.block = ssm_block_stream(cfg)
+            self.block_kind = "ssm"
+        elif cfg.family == "hybrid":
+            self.block = ssm_block_stream(cfg)
+            self.shared = attn_block_stream(cfg, prefix="shared_")
+            self.block_kind = "hybrid"
+        elif cfg.family == "audio":
+            self.block = attn_block_stream(cfg, cross=True)
+            self.enc_block = attn_block_stream(cfg, causal=False,
+                                               prefix="enc_")
+            self.block_kind = "encdec"
+        else:
+            raise ValueError(cfg.family)
+        nop, nmeta = _norm_parts(cfg)
+        self._final_norm_op = nop
+        self._final_norm_meta = nmeta
+        self._head_tbl = _common_tables(cfg)
+
+    # -- parameter metadata -------------------------------------------------
+    def param_meta(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        p: Dict[str, Any] = {
+            "embed": L.embed_meta(cfg.vocab, cfg.d_model, cfg.param_dtype),
+            "final_norm": self._final_norm_meta,
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = L.lm_head_meta(cfg.d_model, cfg.vocab,
+                                       cfg.param_dtype)
+        if self.block_kind == "hybrid":
+            n_groups = cfg.n_layers // cfg.attn_every
+            p["layers"] = _stack_meta(self.block.metas, cfg.n_layers)
+            p["shared_attn"] = self.shared.metas          # ONE copy, reused
+        elif self.block_kind == "encdec":
+            p["layers"] = _stack_meta(self.block.metas, cfg.n_layers)
+            p["enc_layers"] = _stack_meta(self.enc_block.metas,
+                                          cfg.encoder_layers)
+        else:
+            p["layers"] = _stack_meta(self.block.metas, cfg.n_layers)
+        return p
+
+    def abstract_params(self):
+        return abstract(self.param_meta())
+
+    def init_params(self, key):
+        return materialize(self.param_meta(), key)
+
+    # -- caches --------------------------------------------------------------
+    def cache_meta(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        quant = cfg.kv_cache_dtype == "int8"
+        kvdt = jnp.int8 if quant else dt
+
+        def kv():
+            m = {
+                "k": ParamMeta((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               kvdt, init="zeros",
+                               prefs=((0, ("pod", "data")), (1, "model"))),
+                "v": ParamMeta((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               kvdt, init="zeros",
+                               prefs=((0, ("pod", "data")), (1, "model"))),
+            }
+            if quant:   # per-vector scales (paper C2 on the KV stream)
+                for s in ("k_scale", "v_scale"):
+                    m[s] = ParamMeta(
+                        (batch, max_len, cfg.n_kv_heads), jnp.float16,
+                        init="zeros",
+                        prefs=((0, ("pod", "data")), (1, "model")),
+                    )
+            return m
+        d_conv = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        ssm = lambda: {
+            "conv": ParamMeta((batch, cfg.conv_width - 1, d_conv), dt,
+                              init="zeros", prefs=((0, ("pod", "data")),)),
+            "ssm": ParamMeta(
+                (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                F32, init="zeros",
+                prefs=((0, ("pod", "data")), (1, "model"))),
+        }
+        if self.block_kind == "attn":
+            return {"layers": _stack_meta(kv(), cfg.n_layers)}
+        if self.block_kind == "ssm":
+            return {"layers": _stack_meta(ssm(), cfg.n_layers)}
+        if self.block_kind == "hybrid":
+            n_sites = cfg.n_layers // cfg.attn_every
+            return {
+                "layers": _stack_meta(ssm(), cfg.n_layers),
+                "shared_attn": _stack_meta(kv(), n_sites),
+            }
+        if self.block_kind == "encdec":
+            return {
+                "layers": _stack_meta(kv(), cfg.n_layers),
+                "memory": ParamMeta(
+                    (batch, cfg.frontend_len, cfg.d_model), dt, init="zeros",
+                    prefs=((0, ("pod", "data")),)),
+            }
+        raise ValueError(self.block_kind)
+
+    def init_cache(self, batch: int, max_len: int):
+        return materialize(self.cache_meta(batch, max_len), jax.random.PRNGKey(0))
+
+    # -- forward -------------------------------------------------------------
+    def _embed(self, params, tokens):
+        tbl = {"compute_dtype": self.cfg.compute_dtype}
+        return L.embed(params["embed"], tokens, table=tbl)
+
+    def _head(self, params, x):
+        from repro.core import bfp as bfp_lib
+
+        xn = (L.rmsnorm if self.cfg.norm == "rmsnorm" else L.layernorm)(
+            params["final_norm"], x
+        )
+        if self.cfg.tie_embeddings:
+            return jnp.einsum(
+                "bld,vd->blv", xn.astype(F32),
+                params["embed"]["table"].astype(F32),
+            )
+        hp = params["head"]
+        if isinstance(hp.get("w"), bfp_lib.BFPTensor):   # BFP weight storage
+            hp = {"w": bfp_lib.dequantize(hp["w"]).astype(x.dtype)}
+        return L.lm_head(hp, xn, table=self._head_tbl)
+
+    def _scan_blocks(self, stream: Stream, stacked_params, x, ctx,
+                     stacked_cache=None, remat: bool = False):
+        fn = stream.fn()
+
+        def body(carry, xs):
+            h, cache_len = carry
+            lp, lc = xs
+            step_ctx = dict(ctx)
+            step_ctx["cache_len"] = cache_len
+            if lc is not None:
+                step_ctx["cache"] = lc
+            if step_ctx.get("shard") is not None and h.ndim == 3:
+                # the remat-saved residual stream; seq-sharded under the
+                # Megatron-SP option (runtime.sharding)
+                h = step_ctx["shard"](h, "boundary")
+            y, step_ctx = fn(lp, h, step_ctx)
+            new_lc = step_ctx.get("cache") if lc is not None else None
+            return (y, cache_len), new_lc
+
+        if remat:
+            body = jax.checkpoint(body)
+        n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        xs = (stacked_params, stacked_cache)
+        # scan_unroll=large is the dry-run ANALYSIS mode: XLA cost_analysis
+        # counts while-loop bodies once, so the roofline pass compiles an
+        # unrolled variant to get true per-step FLOPs/bytes/collectives.
+        unroll = min(int(ctx.get("scan_unroll", 1)), n)
+        (y, _), new_cache = jax.lax.scan(body, (x, ctx.get("cache_len", 0)),
+                                         xs, length=n, unroll=unroll)
+        return y, new_cache
+
+    # full-sequence forward (train / prefill)
+    def forward(self, params, tokens, *, prefix_embed=None, positions=None,
+                mode="train", cache_out: bool = False, max_len: int = 0,
+                ctx_extra: Optional[Dict[str, Any]] = None):
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm" and prefix_embed is not None:
+            x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+        B, Lseq, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(Lseq, dtype=jnp.int32)[None, :]
+        ctx: Dict[str, Any] = {
+            "positions": positions, "mode": "full",
+            "interpret": True,
+            "compute_dtype": jnp.dtype(cfg.compute_dtype),
+        }
+        if ctx_extra:
+            ctx.update(ctx_extra)
+        if ctx.get("shard") is not None:
+            x = ctx["shard"](x, "bld")
+        remat = cfg.remat and mode == "train"
+
+        cache = None
+        if cache_out:
+            cache = self.init_cache(B, max_len or Lseq)
+
+        if self.block_kind == "encdec":
+            enc = prefix_embed.astype(x.dtype)
+            enc_ctx = {
+                "positions": jnp.arange(enc.shape[1])[None, :],
+                "mode": "full",
+            }
+            enc, _ = self._scan_blocks(self.enc_block, params["enc_layers"],
+                                       enc, enc_ctx, remat=remat)
+            ctx["memory"] = enc
+            if cache_out:
+                cache["memory"] = enc
+        if self.block_kind == "hybrid":
+            y = x
+            n_sites = cfg.n_layers // cfg.attn_every
+            per = cfg.attn_every
+            lp = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_sites, per) + a.shape[1:]),
+                params["layers"],
+            )
+            shared_fn = self.shared.fn()
+            sc_list = []
+            for g in range(n_sites):
+                gp = jax.tree_util.tree_map(lambda a: a[g], lp)
+                gc = None
+                if cache_out:
+                    gc = jax.tree_util.tree_map(
+                        lambda a: a[g * per:(g + 1) * per], cache["layers"]
+                    )
+                y, gc_new = self._scan_blocks(self.block, gp, y, ctx, gc,
+                                              remat=remat)
+                sctx = dict(ctx)
+                if cache_out:
+                    sctx["cache"] = jax.tree_util.tree_map(
+                        lambda a: a[g], cache["shared_attn"]
+                    )
+                    sctx["cache_len"] = 0
+                y, sctx = shared_fn(params["shared_attn"], y, sctx)
+                if cache_out:
+                    sc_list.append(sctx["cache"])
+                    cache["layers"] = jax.tree_util.tree_map(
+                        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                            full, part, g * per, axis=0
+                        ),
+                        cache["layers"], gc_new,
+                    )
+            if cache_out and sc_list:
+                cache["shared_attn"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *sc_list
+                )
+        else:
+            lc = cache["layers"] if cache_out else None
+            if cache_out:
+                ctx["cache_len"] = 0
+            y, new_cache = self._scan_blocks(
+                self.block, params["layers"], x, ctx, lc, remat=remat
+            )
+            if cache_out:
+                cache["layers"] = new_cache
+        logits = self._head(params, y)
+        if cfg.family == "vlm" and prefix_embed is not None:
+            logits = logits[:, prefix_embed.shape[1]:, :]
+        if cache_out:
+            return logits, cache
+        return logits
+
+    # single-token decode against a cache
+    def decode_step(self, params, tokens, cache, cache_len,
+                    ctx_extra: Optional[Dict[str, Any]] = None):
+        cfg = self.cfg
+        x = self._embed(params, tokens)             # (B, 1, D)
+        positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+        ctx: Dict[str, Any] = {
+            "positions": positions, "mode": "decode",
+            "cache_len": cache_len,
+            "compute_dtype": jnp.dtype(cfg.compute_dtype),
+        }
+        if ctx_extra:
+            ctx.update(ctx_extra)
+        if self.block_kind == "encdec":
+            ctx["memory"] = cache["memory"]
+        if self.block_kind == "hybrid":
+            n_sites = cfg.n_layers // cfg.attn_every
+            per = cfg.attn_every
+            lp = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_sites, per) + a.shape[1:]),
+                params["layers"],
+            )
+            lc = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_sites, per) + a.shape[1:]),
+                cache["layers"],
+            )
+            shared_fn = self.shared.fn()
+            y = x
+            new_lc = []
+            new_sc = []
+            for g in range(n_sites):
+                gp = jax.tree_util.tree_map(lambda a: a[g], lp)
+                gc = jax.tree_util.tree_map(lambda a: a[g], lc)
+                y, gc2 = self._scan_blocks(self.block, gp, y, ctx, gc)
+                new_lc.append(gc2)
+                sctx = dict(ctx)
+                sctx["cache"] = jax.tree_util.tree_map(
+                    lambda a: a[g], cache["shared_attn"]
+                )
+                y, sctx = shared_fn(params["shared_attn"], y, sctx)
+                new_sc.append(sctx["cache"])
+            cache = dict(cache)
+            cache["layers"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate([a for a in xs], 0), *new_lc
+            )
+            cache["shared_attn"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_sc
+            )
+        else:
+            y, new_cache = self._scan_blocks(
+                self.block, params["layers"], x, ctx, cache["layers"]
+            )
+            cache = dict(cache)
+            cache["layers"] = new_cache
+        logits = self._head(params, y)
+        return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# losses / step functions
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over valid (label >= 0) positions; logits (B, L, V) f32."""
+    valid = (labels >= 0).astype(F32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    model = LMModel(cfg)
+    tree = model.param_meta()
+    total = 0
+    for path, m in jax.tree_util.tree_leaves_with_path(
+        tree, is_leaf=is_meta
+    ):
+        n = int(np.prod(m.shape))
+        if active_only and cfg.n_experts:
+            keys = jax.tree_util.keystr(path)
+            if any(k in keys for k in ("wg", "wu", "wd")) and "moe" in keys:
+                n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total

@@ -1,0 +1,14 @@
+from .optimizers import adamw, sgd_momentum, OptState
+from .schedules import constant, cosine_with_warmup, linear_warmup
+from .grad_utils import (
+    clip_by_global_norm,
+    global_norm,
+    GradAccumulator,
+    error_feedback_compress,
+)
+
+__all__ = [
+    "adamw", "sgd_momentum", "OptState", "constant", "cosine_with_warmup",
+    "linear_warmup", "clip_by_global_norm", "global_norm",
+    "GradAccumulator", "error_feedback_compress",
+]

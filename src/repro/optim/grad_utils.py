@@ -1,0 +1,107 @@
+"""Gradient utilities: clipping, accumulation, and compressed all-reduce
+with error feedback (distributed-optimization tricks, DESIGN.md §5).
+
+``error_feedback_compress`` applies the paper's C2 block quantizer to
+gradients before they cross the interconnect: the residual (what the
+quantizer dropped) is added back into the next step's gradient, so the
+*sequence* of updates is unbiased even at 8-bit mantissas.  On a real
+mesh, pairing this with ``runtime.collectives.compressed_psum`` cuts DP
+gradient traffic ~4x versus f32 (measured in the dry-run collective
+bytes, EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp as bfp_lib
+
+F32 = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(F32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(F32) * scale).astype(x.dtype), tree
+    ), norm
+
+
+class GradAccumulator:
+    """Microbatch gradient accumulation as a lax.scan over the batch axis.
+
+    ``accumulate(loss_fn, params, batch, n_micro)`` splits every leaf of
+    ``batch`` into n_micro slices along axis 0 and averages grads — the
+    memory/throughput knob used by the perf iterations.
+    """
+
+    def __init__(self, n_micro: int):
+        assert n_micro >= 1
+        self.n_micro = n_micro
+
+    def __call__(self, loss_fn, params, batch):
+        n = self.n_micro
+        if n == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % n == 0, f"batch {b} % n_micro {n} != 0"
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc_g = jax.tree_util.tree_map(
+                lambda a, b_: a + b_.astype(F32), acc_g, g
+            )
+            return (acc_loss + l, acc_g), None
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, F32), params
+        )
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), F32), zero_g),
+                                        micro)
+        inv = 1.0 / n
+        return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+
+def error_feedback_compress(
+    grads, residual, *, mantissa_bits: int = 7, block_size: int = 32
+) -> Tuple[Any, Any]:
+    """(compressed_grads, new_residual) — EF-style unbiased-in-the-limit
+    quantization.  g' = Q(g + r);  r' = (g + r) - g'."""
+
+    def one(g, r):
+        gf = g.astype(F32) + r
+        q = bfp_lib.roundtrip(
+            gf, block_size=block_size, mantissa_bits=mantissa_bits,
+            axis=-1, rounding="nearest",
+        )
+        return q.astype(g.dtype), gf - q
+
+    pairs = jax.tree_util.tree_map(one, grads, residual)
+    comp = jax.tree_util.tree_map(
+        lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_r = jax.tree_util.tree_map(
+        lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return comp, new_r
+
+
+def init_residual(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, F32), params
+    )

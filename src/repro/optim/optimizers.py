@@ -1,0 +1,155 @@
+"""Optimizers from scratch (no optax in this environment).
+
+AdamW with configurable **moment storage**:
+    moment_dtype = "float32" | "bfloat16" | "bfp8"
+"bfp8" stores the FIRST moment as 7-bit-mantissa shared-exponent blocks —
+the paper's C2 block floating-point applied beyond the paper, to optimizer
+state (DESIGN.md §2).  At kimi-k2 scale this is the difference between
+needing 8 TB and ~3 TB for moments (§6).
+
+Measured negative result (EXPERIMENTS.md §Perf, lesson log): BFP8 on the
+SECOND moment diverges — nu's intra-block dynamic range exceeds what any
+linear 7-bit mantissa can hold (ratios > 10^3 within a 32-block), small
+nu crush to exactly 0 and 1/(sqrt(0)+eps) explodes the step.  Sqrt-domain
+storage fails the same way.  This is the paper's §IV.C lesson in reverse:
+never narrow the quantity whose reciprocal you take.  So "bfp8" = BFP8 mu
++ bf16 nu (bf16 has a per-VALUE exponent, no crush); the update math is
+always f32 (wide-accumulator discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp as bfp_lib
+
+F32 = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment  (pytree, storage repr)
+    nu: Any          # second moment (pytree, storage repr)
+    extra: Any = None
+
+
+def _store(x: jax.Array, dtype: str, *, second_moment: bool = False) -> Any:
+    if dtype == "float32":
+        return x.astype(F32)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "bfp8":
+        if second_moment:
+            return x.astype(jnp.bfloat16)   # see module docstring
+        # int8 mantissa (7 bits + sign), one exponent per 32 values
+        return bfp_lib.quantize(
+            x, block_size=32, mantissa_bits=7, axis=-1, rounding="nearest"
+        )
+    raise ValueError(dtype)
+
+
+def _load(x: Any) -> jax.Array:
+    if isinstance(x, bfp_lib.BFPTensor):
+        return bfp_lib.dequantize(x)
+    return x.astype(F32)
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: str = "float32",
+):
+    """Returns (init_fn, update_fn) — the minimal optax-style pair."""
+
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, F32))
+
+    def init(params) -> OptState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: _store(jnp.zeros(p.shape, F32), moment_dtype), params
+        )
+        zeros2 = jax.tree_util.tree_map(
+            lambda p: _store(jnp.zeros(p.shape, F32), moment_dtype,
+                             second_moment=True),
+            params,
+        )
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros2)
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        t = step.astype(F32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        is_bfp = lambda x: isinstance(x, bfp_lib.BFPTensor)
+
+        def upd(g, mu_s, nu_s, p):
+            g = g.astype(F32)
+            mu = b1 * _load(mu_s) + (1 - b1) * g
+            nu = b2 * _load(nu_s) + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = jnp.maximum(nu / bc2, 0.0)   # quantized nu may dip < 0
+            delta = mhat / (jnp.sqrt(nhat) + eps)
+            delta = delta + weight_decay * p.astype(F32)
+            new_p = (p.astype(F32) - lr_t * delta).astype(p.dtype)
+            return (
+                new_p,
+                _store(mu, moment_dtype),
+                _store(nu, moment_dtype, second_moment=True),
+            )
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        # moments tree has the same *structure* as params (BFPTensor is a
+        # registered pytree node, so flatten with explicit leaf test):
+        mu_leaves = jax.tree_util.tree_leaves(state.mu, is_leaf=is_bfp)
+        nu_leaves = jax.tree_util.tree_leaves(state.nu, is_leaf=is_bfp)
+        p_leaves = jax.tree_util.tree_leaves(params)
+        outs = [
+            upd(g, m, n, p)
+            for g, m, n, p in zip(flat_g, mu_leaves, nu_leaves, p_leaves)
+        ]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return new_p, OptState(step, new_mu, new_nu)
+
+    return init, update
+
+
+def sgd_momentum(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, F32))
+
+    def init(params) -> OptState:
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32), params)
+        return OptState(jnp.zeros((), jnp.int32), z, None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(F32) + weight_decay * p.astype(F32)
+            m = momentum * m + g
+            return (p.astype(F32) - lr_t * m).astype(p.dtype), m
+
+        pairs = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, None)
+
+    return init, update

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, F32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(F32)
+        return lr * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+    return f
+
+
+def cosine_with_warmup(
+    lr: float, warmup_steps: int, total_steps: int, final_ratio: float = 0.1
+):
+    def f(step):
+        s = step.astype(F32)
+        warm = lr * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_ratio + (1 - final_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog)
+        )
+        return jnp.where(s < warmup_steps, warm, lr * cos)
+    return f

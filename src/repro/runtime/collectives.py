@@ -1,0 +1,76 @@
+"""Collective building blocks used inside shard_map regions.
+
+``compressed_psum`` — BFP-compressed gradient all-reduce (paper C2 applied
+to the interconnect): all_gather int8 mantissas + per-block exponents,
+dequantize + reduce locally.  Versus an f32 psum this moves ~4x fewer
+bytes (~0.27x, exponents included); at 8 bits the EF residual in
+optim.grad_utils keeps the update sequence unbiased.
+
+``latency_hiding_flags`` — the XLA flags the launcher sets so the SPMD
+scheduler overlaps these collectives with compute (the paper's C4
+module-level overlap, compiler edition).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp as bfp_lib
+
+F32 = jnp.float32
+
+
+def compressed_psum(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    mantissa_bits: int = 7,
+    block_size: int = 32,
+) -> jax.Array:
+    """Sum x across `axis_name` moving quantized bytes (shard_map only)."""
+    q = bfp_lib.quantize(
+        x.astype(F32), block_size=block_size, mantissa_bits=mantissa_bits,
+        axis=-1, rounding="nearest",
+    )
+    m8 = q.mantissa.astype(jnp.int8 if mantissa_bits <= 7 else jnp.int16)
+    e8 = q.exponent.astype(jnp.int32)
+    # the bytes on the wire: int8 mantissas + one exponent per block
+    all_m = jax.lax.all_gather(m8, axis_name)       # (n, ...) int8
+    all_e = jax.lax.all_gather(e8, axis_name)
+    n = all_m.shape[0]
+
+    def deq(i, acc):
+        t = bfp_lib.BFPTensor(
+            all_m[i].astype(jnp.int32), all_e[i],
+            mantissa_bits, block_size, x.ndim - 1,
+        )
+        return acc + bfp_lib.dequantize(t)
+
+    acc = jax.lax.fori_loop(
+        0, n, deq, jnp.zeros(x.shape, F32)
+    )
+    return acc.astype(x.dtype)
+
+
+def psum_bytes_model(
+    nbytes_f32: int, n_devices: int, *, compressed: bool,
+    mantissa_bits: int = 7, block_size: int = 32,
+) -> Tuple[int, int]:
+    """Napkin-math helper used by the perf log: (bytes_f32_ring,
+    bytes_compressed) per device for an all-reduce of a tensor."""
+    ring = 2 * (n_devices - 1) * nbytes_f32 // n_devices
+    mb = 1 if mantissa_bits <= 7 else 2
+    q = nbytes_f32 // 4 * mb + nbytes_f32 // 4 // block_size
+    gather = (n_devices - 1) * q // n_devices
+    return ring, gather
+
+
+def latency_hiding_flags() -> str:
+    return " ".join([
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+        "--xla_tpu_overlap_compute_collective_tc=true",
+        "--xla_tpu_enable_async_all_gather=true",
+    ])

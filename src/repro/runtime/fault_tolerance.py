@@ -1,0 +1,144 @@
+"""Fault tolerance: preemption-safe training loop, straggler watchdog,
+restart/resume — the machinery that makes a 1000-node run survivable
+(DESIGN.md §5).
+
+Components:
+  * ``Watchdog`` — EMA step-time monitor; flags stragglers (a step slower
+    than ``threshold x`` the EMA) and records incidents.  On a real
+    cluster the incident hook triggers checkpoint + re-mesh; in tests the
+    hook is observed directly (a sleep-injected step must be flagged).
+  * ``PreemptionGuard`` — converts SIGTERM/SIGINT into a "save and stop"
+    request the loop honours at the next step boundary (TPU maintenance
+    events give exactly this kind of grace window).
+  * ``TrainRunner`` — step loop glue: deterministic step-indexed data,
+    async checkpoint every N steps, auto-resume from the latest manifest,
+    bit-exact restart (tested), and elastic restore onto a different mesh
+    via the shardings argument.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class Watchdog:
+    def __init__(self, threshold: float = 3.0, ema: float = 0.9,
+                 warmup_steps: int = 2):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.warmup_steps = warmup_steps
+        self.ema: Optional[float] = None
+        self.incidents: List[Dict[str, Any]] = []
+        self._seen = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler incident."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:   # compile steps are outliers
+            return False
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = dt > self.threshold * self.ema
+        if is_straggler:
+            self.incidents.append({"step": step, "dt": dt, "ema": self.ema})
+        else:
+            self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+        return is_straggler
+
+
+class PreemptionGuard:
+    def __init__(self, install: bool = True):
+        self.requested = False
+        self._orig: Dict[int, Any] = {}
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._orig[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass   # not on main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def request(self):               # test hook / manual trigger
+        self.requested = True
+
+    def uninstall(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+class TrainRunner:
+    """Generic fault-tolerant step loop.
+
+    step_fn(state, batch) -> (state, metrics);  state is any pytree that
+    fully determines training (params, opt state, rng, step counter is
+    tracked here).  batch_fn(step) -> batch (deterministic, so resume
+    replays the exact stream).
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        batch_fn: Callable[[int], Any],
+        ckpt: CheckpointManager,
+        *,
+        ckpt_every: int = 50,
+        watchdog: Optional[Watchdog] = None,
+        guard: Optional[PreemptionGuard] = None,
+        on_incident: Optional[Callable[[Dict[str, Any]], None]] = None,
+    ):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.watchdog = watchdog or Watchdog()
+        self.guard = guard or PreemptionGuard(install=False)
+        self.on_incident = on_incident
+        self.metrics_log: List[Dict[str, Any]] = []
+
+    def resume_or_init(self, init_state, *, shardings=None):
+        step, state = self.ckpt.restore_latest(init_state,
+                                               shardings=shardings)
+        if step is None:
+            return 0, init_state
+        return step, state
+
+    def run(self, state, start_step: int, n_steps: int,
+            *, fail_at: Optional[int] = None):
+        """Run to start_step + n_steps.  ``fail_at`` injects a crash
+        (tests: restart must be bit-exact)."""
+        step = start_step
+        end = start_step + n_steps
+        while step < end:
+            if self.guard.requested:
+                self.ckpt.save(step, state, blocking=True,
+                               extra_meta={"reason": "preempted"})
+                return step, state, "preempted"
+            batch = self.batch_fn(step)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+            dt = time.perf_counter() - t0
+            step += 1
+            if self.watchdog.observe(step, dt) and self.on_incident:
+                self.on_incident(self.watchdog.incidents[-1])
+            m = dict(metrics)
+            m.update(step=step, dt=dt)
+            self.metrics_log.append(
+                {k: (float(v) if hasattr(v, "__float__") else v)
+                 for k, v in m.items()}
+            )
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            if step % self.ckpt_every == 0 or step == end:
+                self.ckpt.save(step, state, blocking=(step == end))
+        self.ckpt.wait()
+        return step, state, "done"

@@ -1,0 +1,115 @@
+"""Pipeline parallelism over a mesh axis (GPipe-schedule via shard_map +
+ppermute), DESIGN.md §5.
+
+The paper's C4 module-level multithreading — independent compute modules
+working on different inputs concurrently — is exactly a pipeline; at pod
+scale the stages map onto the "pod" axis so the only cross-pod (DCN-class)
+traffic is one microbatch activation per tick instead of full gradient
+all-reduces.
+
+Schedule: M microbatches through S stages in M + S - 1 ticks; every tick
+each stage runs its block stack on the activation it holds, then the ring
+ppermute shifts activations one stage forward.  jax.grad through the loop
+replays it in reverse (ppermute transposes to the inverse permutation),
+giving the backward pipeline for free; per-stage remat keeps the
+activation footprint at O(M) boundary tensors instead of O(M*L_stage).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+F32 = jnp.float32
+
+
+def split_stages(stacked_params: Any, n_stages: int) -> Any:
+    """(L, ...) stacked layer params -> (S, L/S, ...)."""
+    def f(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, f"{L} layers % {n_stages} stages"
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+    return jax.tree_util.tree_map(f, stacked_params)
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    stage_axis: str,
+    layer_fn: Callable[[Any, jax.Array], jax.Array],
+    staged_params: Any,             # (S, L/S, ...) leaves, sharded dim0
+    x: jax.Array,                   # (M, mb, seq, d) microbatched input
+    *,
+    remat: bool = True,
+) -> jax.Array:
+    """Run the stage-stacked layer scan as a pipeline; returns (M, mb, s, d).
+
+    ``layer_fn(params_one_layer, h) -> h`` is scanned over the local
+    stage's layers; activations ring-shift along `stage_axis`.
+    """
+    S = dict(zip(mesh.axis_names, mesh.devices.shape))[stage_axis]
+    M = x.shape[0]
+
+    def stage_fn(local_params, h):
+        def body(c, lp):
+            return layer_fn(lp, c), None
+        f = jax.checkpoint(
+            lambda c, lp: (layer_fn(lp, c), None)
+        ) if remat else body
+        out, _ = jax.lax.scan(f, h, local_params)
+        return out
+
+    perm_fwd = [(i, (i + 1) % S) for i in range(S)]
+
+    def shard_body(local_params, xm):
+        # local_params: (1, L/S, ...) on each stage; xm: (M, mb, s, d) full
+        lp = jax.tree_util.tree_map(lambda a: a[0], local_params)
+        idx = jax.lax.axis_index(stage_axis)
+        mb_shape = xm.shape[1:]
+        buf = jnp.zeros(mb_shape, xm.dtype)          # activation in flight
+        outs = jnp.zeros((M,) + mb_shape, xm.dtype)
+        n_ticks = M + S - 1
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (while t < M); others use the
+            # ring buffer
+            mb_idx = jnp.minimum(t, M - 1)
+            inject = jnp.logical_and(idx == 0, t < M)
+            h_in = jnp.where(inject, xm[mb_idx], buf)
+            h_out = stage_fn(lp, h_in)
+            # last stage emits microbatch t - (S - 1)
+            out_idx = jnp.clip(t - (S - 1), 0, M - 1)
+            emit = jnp.logical_and(idx == S - 1, t >= S - 1)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs,
+                jnp.where(emit, h_out, outs[out_idx]),
+                out_idx, axis=0,
+            )
+            buf = jax.lax.ppermute(h_out, stage_axis, perm_fwd)
+            return buf, outs
+
+        buf, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # broadcast the last stage's outputs to all stages so the head can
+        # be computed data-parallel afterwards
+        if S > 1:
+            outs = jax.lax.all_gather(outs, stage_axis)[S - 1]
+        return outs
+
+    in_specs = (
+        jax.tree_util.tree_map(lambda _: P(stage_axis), staged_params),
+        P(),
+    )
+    fn = jax.shard_map(
+        shard_body, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        check_vma=False,
+    )
+    return fn(staged_params, x)
+
+
+def microbatch(x: jax.Array, n_micro: int) -> jax.Array:
+    B = x.shape[0]
+    assert B % n_micro == 0
+    return x.reshape(n_micro, B // n_micro, *x.shape[1:])

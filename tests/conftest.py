@@ -1,0 +1,16 @@
+"""Shared pytest fixtures.  NOTE: no XLA_FLAGS here — smoke tests and
+benches must see the host's real (single) device; multi-device tests
+spawn subprocesses that set --xla_force_host_platform_device_count
+themselves (see tests/test_distributed.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

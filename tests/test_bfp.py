@@ -1,0 +1,119 @@
+"""BFP (paper Algorithm 1) tests: bit-exactness vs a numpy oracle, the
+1-block-ulp error bound, matmul semantics, wide-vs-narrow accumulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfp
+
+
+def numpy_algorithm1(x: np.ndarray, mantissa_bits: int) -> np.ndarray:
+    """Literal Algorithm 1 over one block, integer mantissas, trunc shift."""
+    m, e = np.frexp(x.astype(np.float64))
+    e = np.where(x == 0, -(2**30), e)
+    xi = max(e.max(), -(2**29))
+    mi = np.trunc(m * (1 << mantissa_bits)).astype(np.int64)
+    d = np.minimum(xi - e, 31)
+    mb = mi >> d
+    return (mb * np.exp2(float(xi - mantissa_bits))).astype(np.float32)
+
+
+class TestAlgorithm1:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.sampled_from([4, 7, 10, 15]),
+    )
+    def test_bit_exact_vs_numpy(self, seed, mb):
+        x = np.random.default_rng(seed).normal(
+            size=(32,)).astype(np.float32) * 10 ** np.random.default_rng(
+            seed + 1).uniform(-3, 3)
+        ours = np.asarray(bfp.roundtrip(
+            jnp.asarray(x), block_size=32, mantissa_bits=mb, rounding="trunc"
+        ))
+        oracle = numpy_algorithm1(x, mb)
+        np.testing.assert_array_equal(ours, oracle)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 32, 64]))
+    def test_error_bounded_by_block_ulp(self, seed, bs):
+        x = jnp.asarray(
+            np.random.default_rng(seed).normal(size=(4, 128)), jnp.float32
+        )
+        t = bfp.quantize(x, block_size=bs, mantissa_bits=10)
+        y = bfp.dequantize(t)
+        xb = np.asarray(x).reshape(4, 128 // bs, bs)
+        yb = np.asarray(y).reshape(4, 128 // bs, bs)
+        ulp = np.exp2(np.asarray(t.exponent) - 10.0)[..., None]
+        assert np.max(np.abs(xb - yb) / ulp) <= 1.0 + 1e-6
+
+    def test_exact_for_shared_exponent_values(self):
+        x = jnp.asarray([[1.0, -0.5, 0.75, 1.5] * 8])
+        assert jnp.array_equal(bfp.roundtrip(x, block_size=32), x)
+
+    def test_zeros_preserved(self):
+        x = jnp.zeros((2, 64))
+        assert jnp.array_equal(bfp.roundtrip(x), x)
+        mixed = jnp.asarray([[0.0, 1.0] * 16])
+        y = bfp.roundtrip(mixed)
+        assert jnp.array_equal(y, mixed)
+
+    def test_error_decreases_with_mantissa_bits(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+        errs = [
+            float(bfp.quantization_error(x, mantissa_bits=mb))
+            for mb in (4, 7, 10, 15)
+        ]
+        assert errs == sorted(errs, reverse=True)
+        assert errs[-1] < 1e-3
+
+    def test_pad_nondivisible_block(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 50))
+        y = bfp.roundtrip(x, block_size=32)
+        assert y.shape == x.shape
+        rel = jnp.abs(x - y) / jnp.maximum(jnp.abs(x), 1e-6)
+        assert float(jnp.median(rel)) < 1e-2
+
+    def test_nbytes_model(self):
+        t = bfp.quantize(jnp.ones((128, 256)), block_size=32,
+                         mantissa_bits=7)
+        # int8 mantissas + 1B/exponent
+        assert t.nbytes_model() == 128 * 256 + 128 * 8
+
+
+class TestBFPMatmul:
+    def test_wide_accum_close_to_f32(self):
+        a = jax.random.normal(jax.random.PRNGKey(0), (32, 128))
+        b = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+        c = bfp.bfp_matmul_reference(a, b, mantissa_bits=12)
+        rel = float(jnp.max(jnp.abs(c - a @ b)) / jnp.max(jnp.abs(a @ b)))
+        assert rel < 2e-3
+
+    def test_narrow_accumulator_worse_than_wide(self):
+        """The §IV.C motivation: truncating partial sums loses accuracy."""
+        a = jax.random.normal(jax.random.PRNGKey(2), (16, 512)) * 3
+        b = jax.random.normal(jax.random.PRNGKey(3), (512, 16))
+        ref = a @ b
+        wide = bfp.bfp_matmul_reference(a, b, mantissa_bits=6,
+                                        wide_accum=True)
+        narrow = bfp.bfp_matmul_reference(a, b, mantissa_bits=6,
+                                          wide_accum=False)
+        err_w = float(jnp.mean(jnp.abs(wide - ref)))
+        err_n = float(jnp.mean(jnp.abs(narrow - ref)))
+        assert err_n > err_w
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_matmul_grows_with_precision(self, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(k1, (8, 64))
+        b = jax.random.normal(k2, (64, 8))
+        ref = a @ b
+        errs = [
+            float(jnp.max(jnp.abs(
+                bfp.bfp_matmul_reference(a, b, mantissa_bits=mb) - ref)))
+            for mb in (5, 10, 15)
+        ]
+        assert errs[0] >= errs[1] >= errs[2]

@@ -1,0 +1,122 @@
+"""Config exactness vs the assignment + HLO/roofline analysis units."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, get_config
+from repro.configs.base import input_specs, shape_applicable
+
+# the assignment table, verbatim
+ASSIGNED = {
+    "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                        d_ff=32768, vocab=131072, n_experts=8, top_k=2),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                            n_kv_heads=8, d_ff=2048, vocab=163840,
+                            n_experts=384, top_k=8),
+    "qwen2.5-14b": dict(n_layers=48, d_model=5120, n_heads=40,
+                        n_kv_heads=8, d_ff=13824, vocab=152064,
+                        qkv_bias=True),
+    "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                             n_kv_heads=8, d_ff=14336, vocab=131072),
+    "internlm2-1.8b": dict(n_layers=24, d_model=2048, n_heads=16,
+                           n_kv_heads=8, d_ff=8192, vocab=92544),
+    "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                           n_kv_heads=4, d_ff=5632, vocab=32000),
+    "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+                         d_ff=1536, vocab=51865),
+    "internvl2-76b": dict(n_layers=80, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=28672, vocab=128256),
+    "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                        n_kv_heads=32, d_ff=10240, ssm_state=64),
+    "mamba2-370m": dict(n_layers=48, d_model=1024, vocab=50280,
+                        ssm_state=128),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_config_fields(arch):
+    cfg = get_config(arch)
+    for field, want in ASSIGNED[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+def test_all_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["decode_32k"].kind == "decode"
+
+
+def test_long_context_applicability_matrix():
+    runnable = {
+        a: shape_applicable(c, SHAPES["long_500k"])[0]
+        for a, c in all_configs().items()
+    }
+    assert runnable["mamba2-370m"] and runnable["zamba2-2.7b"]
+    assert sum(runnable.values()) == 2          # exactly the sub-quadratic two
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "whisper-tiny",
+                                  "internvl2-76b", "mamba2-370m"])
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_no_allocation(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    for v in specs.values():
+        assert isinstance(v, jax.ShapeDtypeStruct)
+    if SHAPES[shape].kind != "decode" and cfg.frontend != "none":
+        assert "prefix_embed" in specs
+
+
+class TestHLOAnalysis:
+    def test_collective_bytes_parsing(self):
+        from repro.launch.hlo_analysis import collective_bytes
+
+        hlo = """
+        %ag = bf16[8,128]{1,0} all-gather(%p0), dimensions={0}
+        %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%sum
+        %cp = (f32[4,4]{1,0}, f32[4,4]{1,0}) collective-permute(%y)
+        %done = f32[8]{0} all-gather-done(%h)
+        not_a_collective = f32[9]{0} add(%a, %b)
+        """
+        out = collective_bytes(hlo)
+        assert out["all-gather"] == 8 * 128 * 2
+        assert out["all-reduce"] == 256 * 4
+        assert out["collective-permute"] == 2 * 16 * 4
+        assert out["count"] == 3                  # -done not double counted
+
+    def test_op_histogram(self):
+        from repro.launch.hlo_analysis import op_histogram
+
+        hlo = "%a = f32[2]{0} add(%x, %y)\n%b = f32[2]{0} add(%a, %y)\n" \
+              "%c = f32[2]{0} multiply(%a, %b)"
+        hist = dict(op_histogram(hlo))
+        assert hist["add"] == 2 and hist["multiply"] == 1
+
+
+class TestRooflineUnits:
+    def test_model_flops_moe_uses_active(self):
+        import benchmarks.roofline as rl
+
+        dense = rl.model_flops("mistral-nemo-12b", "train_4k")
+        moe = rl.model_flops("kimi-k2-1t-a32b", "train_4k")
+        # kimi has 80x the params but only ~2.5x active-param flops
+        assert moe < dense * 4
+
+    def test_terms_and_dominant(self):
+        import benchmarks.roofline as rl
+
+        rec = {
+            "arch": "tinyllama-1.1b", "shape": "decode_32k", "status": "ok",
+            "n_devices": 256,
+            "flops_per_device": 1e10,
+            "bytes_accessed_per_device": 3e10,
+            "collective_bytes_per_device": {"total": 1e8},
+            "memory": {"argument_size_bytes": 2**30,
+                       "temp_size_bytes": 2**28},
+        }
+        row = rl.analyze(rec)
+        assert row["dominant"] == "memory"
+        assert row["fits_hbm"]
+        assert 0 <= row["roofline_fraction"] <= 1.5

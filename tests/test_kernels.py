@@ -1,0 +1,149 @@
+"""Per-kernel allclose vs ref.py oracles, with hypothesis shape/dtype
+sweeps (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+
+class TestBFPMatmulKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([(8, 64, 8), (48, 100, 36), (128, 256, 128),
+                         (17, 33, 9)]),
+        st.sampled_from([7, 10]),
+    )
+    def test_vs_ref(self, seed, mkn, mb):
+        from repro.kernels.bfp_matmul import bfp_matmul
+        from repro.kernels.bfp_matmul.ref import bfp_matmul_ref
+
+        M, K, N = mkn
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(k1, (M, K))
+        b = jax.random.normal(k2, (K, N))
+        got = bfp_matmul(a, b, mantissa_bits=mb, interpret=True)
+        want = bfp_matmul_ref(a, b, mantissa_bits=mb)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_dtype_bf16_inputs(self):
+        from repro.kernels.bfp_matmul import bfp_matmul
+
+        a = jax.random.normal(jax.random.PRNGKey(0), (16, 64), jnp.bfloat16)
+        b = jax.random.normal(jax.random.PRNGKey(1), (64, 16), jnp.bfloat16)
+        got = bfp_matmul(a, b, mantissa_bits=7, interpret=True)
+        ref = a.astype(jnp.float32) @ b.astype(jnp.float32)
+        assert float(jnp.max(jnp.abs(got - ref))) / float(
+            jnp.max(jnp.abs(ref))) < 0.05
+
+
+class TestWinogradKernel:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([(5, 7, 3, 5), (19, 23, 6, 10), (32, 32, 16, 8),
+                         (12, 4, 1, 1)]),
+    )
+    def test_vs_direct(self, seed, hwcc):
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        h, w, cin, cout = hwcc
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (2, h, w, cin))
+        ker = jax.random.normal(k2, (3, 3, cin, cout))
+        got = winograd_conv2d(x, ker, interpret=True)
+        want = direct_conv2d(x, ker)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_bias_fusion(self):
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 9, 9, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6))
+        b = jax.random.normal(jax.random.PRNGKey(2), (6,))
+        got = winograd_conv2d(x, w, b, interpret=True)
+        np.testing.assert_allclose(got, direct_conv2d(x, w) + b, atol=2e-3)
+
+
+class TestFlashAttentionKernel:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([(1, 4, 4, 64, 16), (2, 8, 2, 257, 32),
+                         (1, 6, 6, 100, 64), (2, 4, 1, 128, 32)]),
+        st.booleans(),
+    )
+    def test_vs_dense(self, seed, shape, causal):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.flash_attention.ref import mha_reference
+
+        B, Hq, Hkv, L, D = shape
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (B, Hq, L, D)) * 0.3
+        k = jax.random.normal(ks[1], (B, Hkv, L, D)) * 0.3
+        v = jax.random.normal(ks[2], (B, Hkv, L, D))
+        got = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                              interpret=True)
+        want = mha_reference(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_decode_attention_matches_full(self):
+        from repro.kernels.flash_attention.ops import decode_attention
+        from repro.kernels.flash_attention.ref import mha_reference
+
+        B, H, K, S, D = 2, 8, 2, 64, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, 1, D))
+        kc = jax.random.normal(ks[1], (B, K, S, D))
+        vc = jax.random.normal(ks[2], (B, K, S, D))
+        got = decode_attention(q, kc, vc, S)
+        want = mha_reference(q, kc, vc, causal=False, kv_len=S)
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+class TestSSDKernel:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        st.sampled_from([(1, 64, 2, 8, 1, 16), (2, 256, 4, 16, 2, 24),
+                         (1, 128, 8, 32, 1, 64)]),
+        st.sampled_from([32, 64]),
+    )
+    def test_vs_recurrence(self, seed, shape, chunk):
+        from repro.kernels.ssd_scan import ssd_scan
+        from repro.kernels.ssd_scan.ref import ssd_reference
+
+        Bz, L, H, P, G, N = shape
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = jax.random.normal(ks[0], (Bz, L, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, L, H))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (Bz, L, G, N)) * 0.3
+        Cm = jax.random.normal(ks[4], (Bz, L, G, N)) * 0.3
+        D = jax.random.normal(ks[5], (H,))
+        got = ssd_scan(x, dt, A, Bm, Cm, D, chunk=min(chunk, L),
+                       interpret=True)
+        want = ssd_reference(x, dt, A, Bm, Cm, D)
+        np.testing.assert_allclose(got, want, atol=3e-3, rtol=3e-3)
+
+    def test_decode_step_consistency(self):
+        from repro.kernels.ssd_scan.ops import ssd_decode_step
+        from repro.kernels.ssd_scan.ref import ssd_reference
+
+        Bz, L, H, P, G, N = 2, 16, 4, 8, 2, 12
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        x = jax.random.normal(ks[0], (Bz, L, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, L, H))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (Bz, L, G, N)) * 0.3
+        Cm = jax.random.normal(ks[4], (Bz, L, G, N)) * 0.3
+        D = jax.random.normal(ks[5], (H,))
+        want = ssd_reference(x, dt, A, Bm, Cm, D)
+        h = jnp.zeros((Bz, H, P, N))
+        for t in range(L):
+            h, y = ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+                                   Cm[:, t], D)
+            np.testing.assert_allclose(y, want[:, t], atol=2e-3, rtol=2e-3)

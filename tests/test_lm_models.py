@@ -1,0 +1,193 @@
+"""LM model tests: per-arch reduced smoke (fwd + train step, shapes +
+finiteness), decode==full consistency, MoE invariants, microcode-driven
+block structure, weight sharing in hybrids."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models.lm import LMModel, cross_entropy
+from repro.models.lm import moe as moe_mod
+
+
+def _prefix_for(cfg, batch=2):
+    if cfg.frontend == "none":
+        return None
+    return jax.random.normal(
+        jax.random.PRNGKey(9), (batch, cfg.frontend_len, cfg.d_model)
+    ) * 0.1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        model = LMModel(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab)
+        kw = {}
+        pf = _prefix_for(cfg)
+        if pf is not None:
+            kw["prefix_embed"] = pf
+        logits = model.forward(params, toks, **kw)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+        # one full train step (fwd+bwd+sgd) must stay finite
+        def loss(p):
+            return cross_entropy(model.forward(p, toks, **kw), toks)
+
+        l0, g = jax.value_and_grad(loss)(params)
+        new_p = jax.tree_util.tree_map(lambda p, gg: p - 1e-2 * gg, params, g)
+        l1 = loss(new_p)
+        assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+        assert all(bool(jnp.all(jnp.isfinite(x)))
+                   for x in jax.tree_util.tree_leaves(g))
+
+
+@pytest.mark.parametrize(
+    "arch", ["tinyllama-1.1b", "mamba2-370m", "zamba2-2.7b", "whisper-tiny",
+             "qwen2.5-14b"]
+)
+def test_decode_matches_full_forward(arch):
+    """Prefill 8 + token-by-token decode == one-shot forward."""
+    cfg = get_smoke_config(arch)
+    model = LMModel(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    kw = {}
+    pf = _prefix_for(cfg)
+    if pf is not None:
+        kw["prefix_embed"] = pf
+    full = model.forward(params, toks, **kw)
+    _, cache = model.forward(params, toks[:, :8], cache_out=True,
+                             max_len=16, **kw)
+    cl = 8
+    for t in range(8, 16):
+        lg, cache = model.decode_step(params, toks[:, t:t + 1], cache, cl)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        assert err < 5e-3, (t, err)
+        cl += 1
+
+
+class TestMoE:
+    def _setup(self, E=8, k=2, d=32, f=64, T=64, cf=1.25):
+        table = {"n_experts": E, "top_k": k, "capacity_factor": cf}
+        meta = moe_mod.moe_meta(d, f, E, jnp.float32)
+        from repro.models.lm.params import materialize
+
+        p = materialize(meta, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, T // 2, d))
+        return p, x, table
+
+    def test_output_shape_finite(self):
+        p, x, table = self._setup()
+        y = moe_mod.moe(p, x, table=table)
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_high_capacity_equals_dense_mixture(self):
+        """With cf high enough nothing drops: output == explicit top-k sum."""
+        p, x, table = self._setup(cf=16.0)
+        y = moe_mod.moe(p, x, table=table)
+        B, L, D = x.shape
+        xt = x.reshape(-1, D)
+        gates = jax.nn.softmax(xt @ p["router"], axis=-1)
+        topv, topi = jax.lax.top_k(gates, table["top_k"])
+        topv = topv / topv.sum(-1, keepdims=True)
+        dense = jnp.zeros_like(xt)
+        for e in range(table["n_experts"]):
+            h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wu"][e])
+            ye = h @ p["wd"][e]
+            w = jnp.sum(jnp.where(topi == e, topv, 0.0), axis=-1)
+            dense = dense + ye * w[:, None]
+        np.testing.assert_allclose(
+            y.reshape(-1, D), dense, atol=2e-4, rtol=2e-3
+        )
+
+    def test_capacity_drops_tokens(self):
+        p, x, table = self._setup(cf=0.25)
+        y = moe_mod.moe(p, x, table=table)
+        # some tokens must be zero-contribution (dropped from all slots)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_rank_computation(self):
+        ids = jnp.asarray([0, 1, 0, 2, 0, 1], jnp.int32)
+        ranks = moe_mod._ranks_by_sort(ids, 3)
+        np.testing.assert_array_equal(ranks, [0, 0, 1, 0, 2, 1])
+
+    def test_aux_loss_balanced_vs_skewed(self):
+        p, x, table = self._setup()
+        bal = moe_mod.aux_load_loss(p, x, table=table)
+        p_skew = dict(p)
+        p_skew["router"] = p["router"].at[:, 0].add(100.0)  # all -> expert 0
+        skew = moe_mod.aux_load_loss(p_skew, x, table=table)
+        assert float(skew) > float(bal)
+
+
+class TestHybridWeightSharing:
+    def test_shared_attention_single_copy(self):
+        """zamba2: 9 call sites, ONE parameter set (microcode addr reuse)."""
+        cfg = get_smoke_config("zamba2-2.7b")
+        model = LMModel(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        assert "shared_attn" in params
+        n_sites = cfg.n_layers // cfg.attn_every
+        assert n_sites == 2
+        # mamba layers stacked; shared attn has NO layer dim
+        sa_wq = params["shared_attn"]["shared_attn"]["wq"]
+        assert sa_wq.ndim == 3                       # (d, h, hd) — unstacked
+        lyr = params["layers"]["ssm"]["in_proj"]
+        assert lyr.shape[0] == cfg.n_layers          # stacked
+
+    def test_grad_flows_to_shared_block(self):
+        cfg = get_smoke_config("zamba2-2.7b")
+        model = LMModel(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                  cfg.vocab)
+        g = jax.grad(
+            lambda p: cross_entropy(model.forward(p, toks), toks)
+        )(params)
+        gn = float(jnp.linalg.norm(g["shared_attn"]["shared_attn"]["wq"]))
+        assert gn > 0                               # both call sites contribute
+
+
+class TestMicrocodeDriven:
+    def test_block_is_microcode_stream(self):
+        cfg = get_smoke_config("tinyllama-1.1b")
+        model = LMModel(cfg)
+        from repro.core.microcode import ExtOp
+
+        ops = [w.ext_opcode for w in model.block.words]
+        assert ExtOp.ATTN in ops
+        assert ExtOp.GLU_MLP in ops
+        # transformer residual == paper Fig.3 cache/add
+        from repro.core.microcode import ResOp
+
+        res = [w.res_op for w in model.block.words]
+        assert res.count(int(ResOp.CACHE)) == 2
+        assert res.count(int(ResOp.ADD)) == 2
+
+    def test_stream_packs_to_256bit_words(self):
+        from repro.core.microcode import pack_program, unpack_program
+
+        cfg = get_smoke_config("grok-1-314b")
+        model = LMModel(cfg)
+        raw = pack_program(model.block.words)
+        assert raw.shape[1] == 32
+        assert unpack_program(raw) == model.block.words
+
+    def test_moe_hyperparams_from_side_table(self):
+        cfg = get_smoke_config("kimi-k2-1t-a32b")
+        model = LMModel(cfg)
+        from repro.core.microcode import ExtOp
+
+        moe_words = [w for w in model.block.words
+                     if w.ext_opcode == ExtOp.MOE]
+        assert len(moe_words) == 1
+        tbl = model.block.tables[moe_words[0].ext_table_idx - 1]
+        assert tbl["n_experts"] == cfg.n_experts
+        assert tbl["top_k"] == cfg.top_k

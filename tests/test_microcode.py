@@ -1,0 +1,93 @@
+"""Microcode ISA tests: pack/unpack roundtrip (property-based), field
+bounds, program packing, Table II bit-width conformance."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import microcode as M
+
+
+def _field_strategy():
+    return st.builds(
+        M.Microcode,
+        layer_type=st.integers(0, 3),
+        transpose_relu=st.integers(0, 3),
+        in_ch=st.integers(0, 2**16 - 1),
+        out_ch=st.integers(0, 2**16 - 1),
+        height=st.integers(0, 2**20 - 1),
+        width=st.integers(0, 2**15 - 1),
+        kernel=st.integers(0, 2),
+        stride=st.integers(0, 1),
+        res_op=st.integers(0, 2),
+        in_addr=st.integers(0, 2**34 - 1),
+        out_addr=st.integers(0, 2**34 - 1),
+        ext_opcode=st.integers(0, 2**8 - 1),
+        ext_table_idx=st.integers(0, 2**16 - 1),
+        ext_addr2=st.integers(0, 2**34 - 1),
+        ext_flags=st.integers(0, 2**16 - 1),
+        reserved=st.integers(0, 2**38 - 1),
+    )
+
+
+class TestMicrocode:
+    def test_word_is_256_bits(self):
+        assert M.MICROCODE_BITS == 256
+        assert sum(w for _, w in M._FIELDS) == 256
+        assert M.pack(M.Microcode()).nbytes == 32
+
+    @settings(max_examples=200, deadline=None)
+    @given(_field_strategy())
+    def test_roundtrip(self, mc):
+        assert M.unpack(M.pack(mc)) == mc
+
+    def test_table_ii_field_widths(self):
+        """The first 144 bits must match Table II exactly."""
+        widths = dict(M._FIELDS)
+        assert widths["layer_type"] == 2
+        assert widths["transpose_relu"] == 2
+        assert widths["in_ch"] == 16
+        assert widths["out_ch"] == 16
+        assert widths["height"] == 20
+        assert widths["width"] == 15
+        assert widths["kernel"] == 2
+        assert widths["stride"] == 1
+        assert widths["res_op"] == 2
+        assert widths["in_addr"] == 34
+        assert widths["out_addr"] == 34
+        # reserved page sums to 112
+        reserved = (widths["ext_opcode"] + widths["ext_table_idx"]
+                    + widths["ext_addr2"] + widths["ext_flags"]
+                    + widths["reserved"])
+        assert reserved == 112
+
+    def test_field_overflow_rejected(self):
+        with pytest.raises(ValueError):
+            M.Microcode(in_ch=2**16).validate()
+        with pytest.raises(ValueError):
+            M.Microcode(width=2**15).validate()
+
+    def test_kernel_codes(self):
+        assert M.Microcode(kernel=int(M.Kernel.K1)).kernel_size == 1
+        assert M.Microcode(kernel=int(M.Kernel.K3)).kernel_size == 3
+        assert M.Microcode(kernel=int(M.Kernel.K7)).kernel_size == 7
+
+    def test_relu_transpose_bits(self):
+        assert M.Microcode(transpose_relu=0b01).relu
+        assert not M.Microcode(transpose_relu=0b01).transpose
+        assert M.Microcode(transpose_relu=0b10).transpose
+        assert M.Microcode(transpose_relu=0b11).relu
+
+    def test_program_roundtrip(self):
+        words = [
+            M.Microcode(layer_type=0, in_ch=64, out_ch=128, kernel=1),
+            M.Microcode(layer_type=3, ext_opcode=int(M.ExtOp.ATTN)),
+        ]
+        raw = M.pack_program(words)
+        assert raw.shape == (2, 32)
+        assert M.unpack_program(raw) == words
+
+    def test_disassemble_smoke(self):
+        words = [M.Microcode(layer_type=0, in_ch=3, out_ch=8, kernel=1,
+                             res_op=1)]
+        text = M.disassemble(words)
+        assert "conv" in text and "res=cache" in text

@@ -1,0 +1,95 @@
+"""Paper §IV.B tests: row-band segmentation equivalence + the band
+schedule's buffer rule, and the transposed-image engine mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.core import Assembler, FCNEngine, LayerSpec
+from repro.core.rowband import band_schedule, conv2d_banded
+
+
+def sym_conv(x, w, stride=1):
+    k = w.shape[0]
+    pad = (k - 1) // 2
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+class TestRowBand:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(0, 500),
+        st.integers(6, 40),
+        st.sampled_from([1, 3, 7]),
+        st.sampled_from([1, 2]),
+        st.integers(1, 6),
+    )
+    def test_banded_equals_full(self, seed, h, k, stride, n_bands):
+        ks = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(ks[0], (2, h, 11, 3))
+        w = jax.random.normal(ks[1], (k, k, 3, 5))
+        got = conv2d_banded(x, w, stride=stride, n_bands=n_bands)
+        want = sym_conv(x, w, stride)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+    def test_band_schedule_respects_buffer(self):
+        h, w, cin = 512, 512, 64
+        bands = band_schedule(h, w, cin, buffer_bytes=1 << 20)
+        assert bands[0][0] == 0 and bands[-1][1] == h
+        for r0, r1 in bands:
+            assert (r1 - r0 + 2) * w * cin * 2 <= (1 << 20) + 2 * w * cin * 2
+        # contiguous, ordered
+        for (a0, a1), (b0, b1) in zip(bands, bands[1:]):
+            assert a1 == b0
+
+    def test_more_bands_less_buffer(self):
+        """Smaller buffer -> more rounds (the paper's load/compute knob)."""
+        n1 = len(band_schedule(512, 512, 64, buffer_bytes=8 << 20))
+        n2 = len(band_schedule(512, 512, 64, buffer_bytes=1 << 20))
+        assert n2 > n1
+
+    def test_banded_conv_with_engine_weights(self):
+        """Row-banding composes with the engine's conv layer output."""
+        specs = [LayerSpec("c", "conv", ["input"], out_ch=4, kernel=3)]
+        prog = Assembler((16, 12, 3)).assemble(specs, outputs=["c"])
+        eng = FCNEngine(prog)
+        params = eng.init_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 12, 3))
+        full = eng(params, x)["c"]
+        banded = conv2d_banded(x, params["c"]["w"], n_bands=4) + params["c"]["b"]
+        np.testing.assert_allclose(banded, full, atol=1e-5)
+
+
+class TestTransposedMode:
+    def _model(self):
+        specs = [
+            LayerSpec("c1", "conv", ["input"], out_ch=6, kernel=3,
+                      relu=True),
+            LayerSpec("p1", "pool", ["c1"], kernel=2, stride=2),
+            LayerSpec("c2", "conv", ["p1"], out_ch=4, kernel=3),
+        ]
+        prog = Assembler((12, 20, 3)).assemble(specs, outputs=["c2"])
+        return FCNEngine(prog)
+
+    def test_transposed_execution_matches(self):
+        """engine(x.T, transposed=True).T == engine(x) — §IV.B verbatim."""
+        eng = self._model()
+        params = eng.init_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 20, 3))
+        plain = eng(params, x)["c2"]
+        xt = jnp.swapaxes(x, 1, 2)
+        tr = eng(params, xt, transposed=True)["c2"]
+        np.testing.assert_allclose(jnp.swapaxes(tr, 1, 2), plain, atol=1e-5)
+
+    def test_shape_validation(self):
+        eng = self._model()
+        params = eng.init_params(jax.random.PRNGKey(0))
+        bad = jnp.zeros((1, 20, 12, 3))
+        with pytest.raises(ValueError):
+            eng(params, bad)                       # wrong orientation
+        eng(params, bad, transposed=True)          # correct when declared

@@ -1,0 +1,174 @@
+"""Serving/perf feature tests: BFP weight storage (paper C2 as HBM
+bandwidth), MoE expert fission, the STD serving pipeline with random-size
+inputs + transpose trick."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.lm import LMModel
+from repro.models.lm import moe as moe_mod
+from repro.models.lm import params as params_lib
+from repro.models.lm.params import materialize
+
+
+class TestBFPWeights:
+    def test_quantized_forward_close(self, monkeypatch):
+        monkeypatch.setattr(params_lib, "_BFP_MIN_SIZE", 1)
+        cfg = get_smoke_config("tinyllama-1.1b")
+        model = LMModel(cfg)
+        metas = model.param_meta()
+        params = model.init_params(jax.random.PRNGKey(0))
+        qp = params_lib.quantize_weights(params, metas)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab)
+        full = model.forward(params, toks)
+        quant = model.forward(qp, toks)
+        p1 = jax.nn.softmax(full, -1)
+        p2 = jax.nn.softmax(quant, -1)
+        assert float(jnp.mean(jnp.abs(p1 - p2))) < 2e-3
+
+    def test_decode_with_bfp_weights(self, monkeypatch):
+        monkeypatch.setattr(params_lib, "_BFP_MIN_SIZE", 1)
+        cfg = get_smoke_config("internlm2-1.8b")
+        model = LMModel(cfg)
+        metas = model.param_meta()
+        params = model.init_params(jax.random.PRNGKey(0))
+        qp = params_lib.quantize_weights(params, metas)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                  cfg.vocab)
+        _, cache = model.forward(qp, toks, cache_out=True, max_len=12)
+        lg, cache = model.decode_step(qp, toks[:, :1], cache, 8)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+    def test_storage_is_int8(self, monkeypatch):
+        monkeypatch.setattr(params_lib, "_BFP_MIN_SIZE", 1)
+        cfg = get_smoke_config("tinyllama-1.1b")
+        model = LMModel(cfg)
+        metas = model.param_meta()
+        params = model.init_params(jax.random.PRNGKey(0))
+        qp = params_lib.quantize_weights(params, metas)
+        wq = qp["layers"]["attn"]["wq"]
+        from repro.core.bfp import BFPTensor
+
+        assert isinstance(wq, BFPTensor)
+        assert wq.mantissa.dtype == jnp.int8
+        # embed is excluded (gather path)
+        assert not isinstance(qp["embed"]["table"], BFPTensor)
+
+    def test_abstract_matches_quantized(self, monkeypatch):
+        monkeypatch.setattr(params_lib, "_BFP_MIN_SIZE", 1)
+        cfg = get_smoke_config("tinyllama-1.1b")
+        model = LMModel(cfg)
+        metas = model.param_meta()
+        params = model.init_params(jax.random.PRNGKey(0))
+        qp = params_lib.quantize_weights(params, metas)
+        ab = params_lib.bfp_abstract(metas)
+        s1 = jax.tree_util.tree_structure(qp)
+        s2 = jax.tree_util.tree_structure(ab)
+        assert s1 == s2
+        for a, b in zip(jax.tree_util.tree_leaves(qp),
+                        jax.tree_util.tree_leaves(ab)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+
+class TestMoEFission:
+    def test_equivalence_to_unfissioned(self):
+        d, f, E, k, T = 32, 64, 4, 2, 64
+        t1 = {"n_experts": E, "top_k": k, "capacity_factor": 16.0}
+        p1 = materialize(moe_mod.moe_meta(d, f, E, jnp.float32),
+                         jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, T // 2, d))
+        y1 = moe_mod.moe(p1, x, table=t1)
+        r = 2
+        p2 = {
+            "router": p1["router"],
+            "wg": p1["wg"].reshape(E, d, r, f // r).transpose(0, 2, 1, 3)
+            .reshape(E * r, d, f // r),
+            "wu": p1["wu"].reshape(E, d, r, f // r).transpose(0, 2, 1, 3)
+            .reshape(E * r, d, f // r),
+            "wd": p1["wd"].reshape(E, r, f // r, d).reshape(E * r, f // r, d),
+        }
+        y2 = moe_mod.moe(p2, x, table=dict(t1, fission=r))
+        np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+
+    def test_fission_meta_shapes(self):
+        m = moe_mod.moe_meta(32, 64, 8, jnp.float32, fission=2)
+        assert m["wg"].shape == (16, 32, 32)
+        assert m["wd"].shape == (16, 32, 32)
+        assert m["router"].shape == (32, 8)        # router stays per-expert
+
+
+class TestSTDServing:
+    def test_random_size_and_transpose_trick(self, monkeypatch):
+        import repro.launch.serve as srv
+
+        monkeypatch.setattr(srv, "MAX_WIDTH", 100)   # force the trick
+        svc = srv.STDService(width=0.125, buckets=(64, 128, 256))
+        img = np.random.rand(64, 160, 3).astype(np.float32)   # w > limit
+        boxes = svc(img)
+        assert svc.stats["transposed"] == 1
+        assert isinstance(boxes, list)
+
+    def test_pipelined_results_match_sequential(self):
+        from repro.data.images import SyntheticSTDData
+        from repro.launch.serve import STDService
+
+        svc = STDService(width=0.125, buckets=(64,))
+        images = [SyntheticSTDData((56, 64), seed=i).sample(0, 1)["images"][0]
+                  for i in range(4)]
+        seq = [svc(img) for img in images]
+        pipe = svc.serve_pipelined(images)
+        assert [[b["box"] for b in r] for r in seq] == \
+               [[b["box"] for b in r] for r in pipe]
+
+
+class TestInt8KVCache:
+    """Paper C2 on the decode-dominant stream (§Perf cell C finding)."""
+
+    def test_decode_quality_and_dtype(self):
+        import dataclasses
+
+        cfg = dataclasses.replace(get_smoke_config("tinyllama-1.1b"),
+                                  kv_cache_dtype="int8")
+        m = LMModel(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab)
+        full = m.forward(params, toks)
+        _, cache = m.forward(params, toks[:, :8], cache_out=True,
+                             max_len=16)
+        assert cache["layers"]["k"].dtype == jnp.int8
+        assert cache["layers"]["k_scale"].dtype == jnp.float16
+        cl = 8
+        outs = []
+        for t in range(8, 16):
+            lg, cache = m.decode_step(params, toks[:, t:t + 1], cache, cl)
+            outs.append(lg[:, 0])
+            cl += 1
+        lg = jnp.stack(outs, 1)
+        p1 = jax.nn.softmax(lg, -1)
+        p2 = jax.nn.softmax(full[:, 8:], -1)
+        assert float(jnp.mean(jnp.abs(p1 - p2))) < 1e-3
+
+    def test_cache_bytes_halved(self):
+        import dataclasses
+
+        import numpy as np
+
+        from repro.models.lm.params import is_meta
+
+        base = get_smoke_config("tinyllama-1.1b")
+        q = dataclasses.replace(base, kv_cache_dtype="int8")
+
+        def cache_bytes(cfg):
+            m = LMModel(cfg)
+            tree = m.cache_meta(8, 1024)
+            return sum(
+                int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                for x in jax.tree_util.tree_leaves(tree, is_leaf=is_meta)
+            )
+
+        b0, b1 = cache_bytes(base), cache_bytes(q)
+        assert b1 < 0.6 * b0          # int8 + small scale tensors

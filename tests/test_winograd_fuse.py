@@ -1,0 +1,88 @@
+"""Winograd F(4x4,3x3) and fusion (BN fold, phase-decomposed upsample)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.core import fuse, winograd
+
+
+def direct(x, w, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+class TestWinograd:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(0, 100),
+        st.integers(4, 21),
+        st.integers(4, 21),
+        st.sampled_from([1, 3, 5]),
+        st.sampled_from([1, 2, 7]),
+        st.sampled_from(["SAME", "VALID"]),
+    )
+    def test_matches_direct_conv(self, seed, h, w, cin, cout, padding):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (2, h, w, cin))
+        ker = jax.random.normal(k2, (3, 3, cin, cout))
+        got = winograd.winograd_conv2d(x, ker, padding=padding)
+        want = direct(x, ker, padding)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-3)
+
+    def test_transform_identity(self):
+        """AT @ (BT X B pointwise GWG^T) A == conv for a single tile."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 6, 1))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 1, 1))
+        got = winograd.winograd_conv2d(x, w, padding="VALID")
+        want = direct(x, w, "VALID")
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_multiply_reduction_factor(self):
+        c = winograd.multiply_count(64, 64, 128, 128)
+        assert abs(c["mac_reduction"] - 4.0) < 0.01   # the paper's 4x
+
+
+class TestBNFold:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 100))
+    def test_fold_equivalence(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+        x = jax.random.normal(ks[0], (2, 8, 8, 5))
+        w = jax.random.normal(ks[1], (3, 3, 5, 7))
+        b = jax.random.normal(ks[2], (7,))
+        gamma = jax.random.normal(ks[3], (7,)) * 0.2 + 1.0
+        beta = jax.random.normal(ks[4], (7,))
+        mean = jax.random.normal(ks[5], (7,))
+        var = jax.nn.softplus(jax.random.normal(ks[6], (7,))) + 0.1
+        y_unfused = (direct(x, w) + b - mean) * gamma * lax.rsqrt(
+            var + 1e-5) + beta
+        wf, bf = fuse.fold_batchnorm(w, b, gamma, beta, mean, var)
+        y_fused = direct(x, wf) + bf
+        np.testing.assert_allclose(y_fused, y_unfused, atol=1e-4, rtol=1e-4)
+
+
+class TestUpsampleFusion:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 100), st.integers(2, 12), st.integers(2, 12))
+    def test_phase_decomposition_equivalence(self, seed, h, w):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (2, h, w, 3))
+        ker = jax.random.normal(k2, (3, 3, 3, 4))
+        naive = fuse.upsample2x_conv3x3_naive(x, ker)
+        fused = fuse.upsample2x_conv3x3_fused(x, ker)
+        np.testing.assert_allclose(fused, naive, atol=1e-5, rtol=1e-5)
+
+    def test_75_percent_reduction(self):
+        c = fuse.upsample_mac_counts(64, 64, 32, 32)
+        assert abs(c["reduction"] - 0.75) < 1e-9      # exactly the paper
+
+    def test_nearest_upsample(self):
+        x = jnp.arange(4.0).reshape(1, 2, 2, 1)
+        y = fuse.upsample_nearest_2x(x)
+        assert y.shape == (1, 4, 4, 1)
+        assert float(y[0, 0, 0, 0]) == float(y[0, 1, 1, 0]) == 0.0
+        assert float(y[0, 2, 3, 0]) == float(x[0, 1, 1, 0])
