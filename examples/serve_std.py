@@ -1,8 +1,16 @@
 """Serve scene-text detection with batched random-size requests — the
 paper's deployment scenario (Fig. 2), including the §IV.B random-size
-path (bucketing + transpose trick) and C4 module-level pipelining.
+path (bucketing + transpose trick), C4 module-level pipelining, and the
+dynamic micro-batching scheduler.
 
 Run:  PYTHONPATH=src python examples/serve_std.py --requests 12
+      PYTHONPATH=src python examples/serve_std.py --requests 12 --batched \
+          --max-batch 8 --max-wait-ms 10
+
+``--batched`` routes the same request stream through the async
+micro-batching scheduler (resolution-bucketed batches, timeout flush)
+and checks box-level parity against the pipelined path.  For the full
+TPS/latency comparison see ``benchmarks/serve_bench.py``.
 """
 import os
 import sys

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tiered CI: fast tier first for quick signal (property tests capped to
+# a few seeded examples — the cap applies to the _hypothesis_compat shim;
+# with real hypothesis installed, per-test @settings win and the smoke
+# tier is full-size — slow-marked multi-process tests excluded), then the
+# full fast tier, then the slow tier.  Extra args pass to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== smoke tier (capped property examples) =="
+HYPOTHESIS_COMPAT_MAX_EXAMPLES=5 python -m pytest -q -x -m "not slow" "$@"
+
+echo "== fast tier (full example counts) =="
+python -m pytest -q -m "not slow" "$@"
+
+echo "== slow tier (multi-process) =="
+# exit 5 = nothing collected (e.g. a path argument with no slow tests)
+python -m pytest -q -m "slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }

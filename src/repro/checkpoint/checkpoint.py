@@ -21,6 +21,7 @@ the same path (mantissa + exponent leaves).
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import re
@@ -33,6 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+# unique tmp suffixes: two writers of the same step (e.g. an orphaned async
+# write racing a post-restart save) must never share a staging directory
+_TMP_SEQ = itertools.count()
 
 
 def _leaf_key(path) -> str:
@@ -82,9 +86,11 @@ def save_checkpoint(
         "meta": extra_meta or {},
     }
 
+    tmp_suffix = f".tmp-{os.getpid()}-{next(_TMP_SEQ)}"
+
     def write():
         final = os.path.join(directory, f"step_{step}")
-        tmp = final + ".tmp"
+        tmp = final + tmp_suffix
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
@@ -159,6 +165,13 @@ class CheckpointManager:
         self.keep = keep
         self._pending: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        # reclaim staging dirs orphaned by a crashed writer: tmp suffixes
+        # are unique per save, so a dead process's dir is never reused and
+        # would otherwise live forever (single-writer-per-dir assumption)
+        for name in os.listdir(directory):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     def steps(self) -> List[int]:
         out = []

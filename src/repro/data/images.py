@@ -90,3 +90,49 @@ class SyntheticSTDData:
         gen = SyntheticSTDData((h, w), self.max_instances,
                                seed=self.seed + step)
         return gen.sample(0, 1)
+
+
+class RequestStream:
+    """Seeded mixed-resolution request stream for the serving benchmarks:
+    ``n`` images with sizes drawn from ``hw_range`` (multiples of
+    ``step_px`` so the 1/4-scale label maps stay integral), a fraction of
+    over-wide images for the §IV.B transpose trick, and ground-truth box
+    counts for sanity checks.  Iterating yields
+    ``{"image", "hw", "boxes"}`` dicts; ``images()`` returns just the
+    image list."""
+
+    def __init__(self, n: int, seed: int = 0,
+                 hw_range: Tuple[Tuple[int, int], Tuple[int, int]] =
+                 ((48, 128), (48, 128)),
+                 step_px: int = 8, over_wide_frac: float = 0.0,
+                 over_wide_w: int = 0, max_instances: int = 4):
+        self.n = n
+        self.seed = seed
+        self.hw_range = hw_range
+        self.step_px = step_px
+        self.over_wide_frac = over_wide_frac
+        self.over_wide_w = over_wide_w
+        self.max_instances = max_instances
+
+    def __iter__(self):
+        (h0, h1), (w0, w1) = self.hw_range
+        for i in range(self.n):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, i, 4242])
+            )
+            h = int(rng.integers(h0 // self.step_px,
+                                 h1 // self.step_px + 1)) * self.step_px
+            if (self.over_wide_frac > 0
+                    and rng.random() < self.over_wide_frac):
+                w = self.over_wide_w
+            else:
+                w = int(rng.integers(w0 // self.step_px,
+                                     w1 // self.step_px + 1)) * self.step_px
+            sample = SyntheticSTDData(
+                (h, w), self.max_instances, seed=self.seed + i
+            ).sample(0, 1)
+            yield {"image": sample["images"][0], "hw": (h, w),
+                   "boxes": sample["boxes"][0]}
+
+    def images(self) -> List[np.ndarray]:
+        return [r["image"] for r in self]

@@ -1,0 +1,245 @@
+"""Dynamic micro-batching for the serving path (paper Fig. 2/9).
+
+The paper's deployment wins OpEx by keeping the engine busy with batches
+instead of single images.  This module provides the request scheduler
+that makes that possible behind an async `submit() -> Future` API:
+
+  * requests are grouped by a caller-supplied bucket key (the padded
+    (H, W) shape, so every image in a batch shares one compiled engine),
+  * a bucket flushes when it reaches ``max_batch`` ("full") or when its
+    oldest request has waited ``max_wait_ms`` ("timeout"),
+  * one infer thread serializes device work (batches from different
+    buckets interleave, never overlap), and a small post pool scatters
+    per-item results back to futures — so host preprocess (caller
+    threads), device inference, and host postprocess overlap exactly
+    like the paper's C4 module-level pipeline.
+
+The scheduler is model-agnostic: ``infer_fn(key, payloads) -> outputs``
+runs one batch, ``post_fn(payload, output) -> result`` finishes one item.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Hashable, List, Optional
+
+
+def round_batch(n: int, max_batch: int, mode: str = "pow2") -> int:
+    """Padded batch size for ``n`` live items: "pow2" rounds up to the
+    next power of two (<= max_batch) so each bucket compiles at most
+    log2(max_batch)+1 engine variants; "none" keeps the exact size."""
+    if mode == "none":
+        return n
+    if mode == "pow2":
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, max_batch) if n <= max_batch else n
+    raise ValueError(f"unknown batch rounding mode: {mode}")
+
+
+class LRUCache:
+    """Tiny LRU for compiled engines: key -> value, least-recently-used
+    eviction at ``capacity`` (0 or negative = unbounded)."""
+
+    def __init__(self, capacity: int = 8):
+        self.capacity = capacity
+        self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while self.capacity > 0 and len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._d
+
+
+@dataclasses.dataclass
+class _Item:
+    key: Hashable
+    payload: Any
+    future: Future
+    t_submit: float
+
+
+class MicroBatcher:
+    """Async request queue -> bucketed micro-batches -> futures.
+
+    Lifecycle: ``start()`` / ``stop()`` (or use as a context manager).
+    ``stop()`` drains every pending request before returning.
+    """
+
+    def __init__(
+        self,
+        infer_fn: Callable[[Hashable, List[Any]], List[Any]],
+        post_fn: Optional[Callable[[Any, Any], Any]] = None,
+        *,
+        max_batch: int = 8,
+        max_wait_ms: float = 5.0,
+        queue_depth: int = 4,
+        post_workers: int = 2,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.infer_fn = infer_fn
+        self.post_fn = post_fn
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.queue_depth = queue_depth
+        self.post_workers = post_workers
+        self._cond = threading.Condition()
+        self._pending: Dict[Hashable, deque] = {}
+        self._stop = False
+        self._running = False
+        self.stats: Dict[str, Any] = {
+            "batches": [],            # {key, n, reason, queued_ms}
+            "flush_full": 0,
+            "flush_timeout": 0,
+            "flush_drain": 0,
+            "item_latency_s": [],     # submit -> future resolved
+        }
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> "MicroBatcher":
+        if self._running:
+            return self
+        self._stop = False
+        self._running = True
+        self._infer_q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
+        self._post_pool = ThreadPoolExecutor(
+            self.post_workers, thread_name_prefix="mb-post"
+        )
+        self._sched_t = threading.Thread(
+            target=self._sched_loop, name="mb-sched", daemon=True
+        )
+        self._infer_t = threading.Thread(
+            target=self._infer_loop, name="mb-infer", daemon=True
+        )
+        self._sched_t.start()
+        self._infer_t.start()
+        return self
+
+    def stop(self) -> None:
+        if not self._running:
+            return
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._sched_t.join()
+        self._infer_t.join()
+        self._post_pool.shutdown(wait=True)
+        self._running = False
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request side ----------------------------------------------------------
+    def submit(self, key: Hashable, payload: Any) -> Future:
+        fut: Future = Future()
+        item = _Item(key, payload, fut, time.perf_counter())
+        with self._cond:
+            if self._stop or not self._running:
+                raise RuntimeError("MicroBatcher is not running")
+            self._pending.setdefault(key, deque()).append(item)
+            self._cond.notify_all()
+        return fut
+
+    # -- scheduler thread ------------------------------------------------------
+    def _next_batch(self):
+        """Block until a bucket is ready; None once stopped AND drained."""
+        with self._cond:
+            while True:
+                now = time.perf_counter()
+                ready_key, reason, deadline = None, None, None
+                for k, dq in self._pending.items():
+                    if not dq:
+                        continue
+                    if len(dq) >= self.max_batch:
+                        ready_key, reason = k, "full"
+                        break
+                    if self._stop:
+                        ready_key, reason = k, "drain"
+                        break
+                    d = dq[0].t_submit + self.max_wait_s
+                    if d <= now:
+                        ready_key, reason = k, "timeout"
+                        break
+                    deadline = d if deadline is None else min(deadline, d)
+                if ready_key is not None:
+                    dq = self._pending[ready_key]
+                    n = min(len(dq), self.max_batch)
+                    return ready_key, reason, [dq.popleft() for _ in range(n)]
+                if self._stop:
+                    return None
+                self._cond.wait(
+                    timeout=None if deadline is None
+                    else max(deadline - now, 0.0)
+                )
+
+    def _sched_loop(self):
+        while True:
+            batch = self._next_batch()
+            self._infer_q.put(batch)          # None = drained sentinel
+            if batch is None:
+                return
+
+    # -- infer thread ----------------------------------------------------------
+    def _infer_loop(self):
+        while True:
+            got = self._infer_q.get()
+            if got is None:
+                return
+            key, reason, items = got
+            self.stats[f"flush_{reason}"] += 1
+            self.stats["batches"].append({
+                "key": key, "n": len(items), "reason": reason,
+                "queued_ms": (time.perf_counter() - items[0].t_submit) * 1e3,
+            })
+            try:
+                outs = self.infer_fn(key, [it.payload for it in items])
+            except Exception as e:
+                for it in items:
+                    it.future.set_exception(e)
+                continue
+            for it, out in zip(items, outs):
+                if self.post_fn is None:
+                    self._resolve(it, out)
+                else:
+                    self._post_pool.submit(self._post_one, it, out)
+
+    def _post_one(self, item: _Item, out: Any):
+        try:
+            self._resolve(item, self.post_fn(item.payload, out))
+        except Exception as e:
+            item.future.set_exception(e)
+
+    def _resolve(self, item: _Item, result: Any):
+        self.stats["item_latency_s"].append(
+            time.perf_counter() - item.t_submit
+        )
+        item.future.set_result(result)

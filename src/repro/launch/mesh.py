@@ -9,20 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Version-portable ``jax.make_mesh``: newer JAX wants explicit
+    ``axis_types`` (``jax.sharding.AxisType`` appeared after 0.4.x);
+    older JAX has neither the enum nor the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     """Tiny mesh over however many devices the host actually has (tests)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 # v5e-class hardware constants for the roofline analysis (per chip)

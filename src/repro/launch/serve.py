@@ -5,9 +5,14 @@ paper's throughput tricks:
   * random-size inputs bucketed to a few compiled shapes (§IV.B analogue
     of row-wise segmentation; the transpose trick applied verbatim for
     over-wide images),
+  * dynamic micro-batching: an async request queue groups images by
+    resolution bucket and runs one compiled batched engine per bucket
+    (launch/batching.py), flushing on ``max_batch`` or ``max_wait_ms``,
   * module-level pipelining (C4): host preprocess / device FCN / host
-    CC-postprocess run as a 3-stage thread pipeline, so stage i of image
-    n overlaps stage i+1 of image n-1,
+    CC-postprocess overlap as pipeline stages, so stage i of image n
+    overlaps stage i+1 of image n-1,
+  * an engine LRU keyed by (bucket, batch) so compile cost is paid once
+    per shape,
   * TPS + latency accounting (feeds the Fig. 9a benchmark).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --width 0.25
@@ -15,14 +20,17 @@ paper's throughput tricks:
 from __future__ import annotations
 
 import argparse
-import queue
 import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.launch.batching import LRUCache, MicroBatcher, round_batch
+from repro.runtime.pipeline import HostPipeline
 
 MAX_WIDTH = 4096          # the paper's width limit
 
@@ -34,18 +42,30 @@ def bucket_hw(h: int, w: int, buckets: Tuple[int, ...]) -> Tuple[int, int]:
 
 
 class STDService:
-    """Compiled-engine cache per bucket + the serving pipeline."""
+    """Per-bucket model cache + (bucket, batch)-keyed compiled engines +
+    the sequential / pipelined / micro-batched serving modes."""
 
     def __init__(self, width: float = 0.25, mode: str = "optimized",
                  buckets: Tuple[int, ...] = (64, 128, 256),
-                 score_thr: float = 0.5, link_thr: float = 0.5):
+                 score_thr: float = 0.5, link_thr: float = 0.5,
+                 max_batch: int = 8, max_wait_ms: float = 5.0,
+                 batch_round: str = "pow2",
+                 engine_cache_capacity: int = 16):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
         self.buckets = buckets
         self.score_thr = score_thr
         self.link_thr = link_thr
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.batch_round = batch_round
         self._models: Dict[Tuple[int, int], Any] = {}
         self._params: Dict[Tuple[int, int], Any] = {}
+        self._engines = LRUCache(engine_cache_capacity)
+        self._lock = threading.Lock()
+        self._batcher: Optional[MicroBatcher] = None
         self._width = width
         self._mode = mode
         self._mk = lambda hw: PixelLinkModel(STDConfig(
@@ -56,11 +76,39 @@ class STDService:
                                       "transposed": 0}
 
     def _get(self, hw: Tuple[int, int]):
-        if hw not in self._models:
-            m = self._mk(hw)
-            self._models[hw] = m
-            self._params[hw] = m.init_params(jax.random.PRNGKey(0))
-        return self._models[hw], self._params[hw]
+        with self._lock:
+            if hw not in self._models:
+                m = self._mk(hw)
+                self._models[hw] = m
+                self._params[hw] = m.init_params(jax.random.PRNGKey(0))
+            return self._models[hw], self._params[hw]
+
+    def _run_fn(self, hw: Tuple[int, int], batch: int):
+        """Compiled engine for one (bucket, batch) shape: FCN forward +
+        batched CC labeling with per-image valid-region masking, one jit
+        cache entry per shape (LRU-evicted)."""
+        key = (hw, batch)
+        fn = self._engines.get(key)
+        if fn is not None:
+            return fn
+        model, _ = self._get(hw)
+        from repro.models.fcn import postprocess as pp
+
+        def run(params, x, valid_q):
+            out = model.apply(params, x)
+            h, w = out["score"].shape[1:]
+            mask = (
+                (jnp.arange(h)[None, :, None] < valid_q[:, 0, None, None])
+                & (jnp.arange(w)[None, None, :] < valid_q[:, 1, None, None])
+            )
+            return pp.cc_label_batched(
+                out["score"], out["links"], self.score_thr, self.link_thr,
+                valid_mask=mask,
+            )
+
+        fn = jax.jit(run)
+        self._engines.put(key, fn)
+        return fn
 
     # -- stages ---------------------------------------------------------------
     def preprocess(self, img: np.ndarray):
@@ -71,28 +119,44 @@ class STDService:
             img = np.transpose(img, (1, 0, 2))
             h, w = w, h
             transposed = True
-            self.stats["transposed"] += 1
+            with self._lock:
+                self.stats["transposed"] += 1
         bh, bw = bucket_hw(h, w, self.buckets)
         pad = np.zeros((bh, bw, 3), np.float32)
         pad[:h, :w] = img
         return pad, (h, w), transposed
 
-    def infer(self, batch: np.ndarray, hw: Tuple[int, int]):
-        model, params = self._get(hw)
-        return model.apply(params, jnp.asarray(batch))
+    def infer_labels(self, stack: np.ndarray,
+                     valid_hws: List[Tuple[int, int]]) -> np.ndarray:
+        """(B, bh, bw, 3) padded batch -> (B, bh/4, bw/4) int32 label maps.
 
-    def postprocess(self, out, valid_hw: Tuple[int, int],
+        The batch axis may be padded past ``len(valid_hws)`` (batch-size
+        rounding); trailing slots are zero images whose labels are
+        discarded by the caller.
+        """
+        hw = stack.shape[1:3]
+        n_live = len(valid_hws)
+        b = round_batch(n_live, self.max_batch, self.batch_round)
+        if b > n_live:
+            stack = np.concatenate(
+                [stack, np.zeros((b - n_live,) + stack.shape[1:],
+                                 stack.dtype)]
+            )
+        valid_q = np.zeros((b, 2), np.int32)
+        for i, (vh, vw) in enumerate(valid_hws):
+            valid_q[i] = (vh // 4, vw // 4)
+        fn = self._run_fn(tuple(hw), b)
+        _, params = self._get(tuple(hw))
+        return np.asarray(fn(params, jnp.asarray(stack),
+                             jnp.asarray(valid_q)))
+
+    def postprocess(self, labels: np.ndarray, valid_hw: Tuple[int, int],
                     transposed: bool) -> List[Dict]:
+        """One image's label map -> boxes (host-side serving tail)."""
         from repro.models.fcn import postprocess as pp
 
-        score = np.asarray(out["score"])[0]
-        links = np.asarray(out["links"])[0]
         vh, vw = valid_hw[0] // 4, valid_hw[1] // 4
-        labels = np.asarray(pp.cc_label(
-            jnp.asarray(score), jnp.asarray(links),
-            self.score_thr, self.link_thr,
-        ))[:vh, :vw]
-        boxes = pp.boxes_from_labels(labels)
+        boxes = pp.boxes_from_labels(np.asarray(labels)[:vh, :vw])
         if transposed:                              # inverse transposition
             for b in boxes:
                 x0, y0, x1, y1 = b["box"]
@@ -102,52 +166,97 @@ class STDService:
     def __call__(self, img: np.ndarray) -> List[Dict]:
         t0 = time.perf_counter()
         x, valid, tr = self.preprocess(img)
-        out = self.infer(x[None], x.shape[:2])
-        boxes = self.postprocess(out, valid, tr)
-        self.stats["n"] += 1
-        self.stats["latency_s"].append(time.perf_counter() - t0)
+        labels = self.infer_labels(x[None], [valid])[0]
+        boxes = self.postprocess(labels, valid, tr)
+        with self._lock:
+            self.stats["n"] += 1
+            self.stats["latency_s"].append(time.perf_counter() - t0)
         return boxes
 
     # -- pipelined server (C4 module-level multithreading) ---------------------
     def serve_pipelined(self, images: List[np.ndarray]) -> List[List[Dict]]:
-        q_pre: "queue.Queue" = queue.Queue(maxsize=4)
-        q_post: "queue.Queue" = queue.Queue(maxsize=4)
-        results: List[Optional[List[Dict]]] = [None] * len(images)
+        def pre(img):
+            return self.preprocess(img)
 
-        def pre_worker():
-            for i, img in enumerate(images):
-                q_pre.put((i,) + self.preprocess(img))
-            q_pre.put(None)
+        def infer(item):
+            x, valid, tr = item
+            labels = self.infer_labels(x[None], [valid])[0]
+            return labels, valid, tr
 
-        def infer_worker():
-            while True:
-                item = q_pre.get()
-                if item is None:
-                    q_post.put(None)
-                    return
-                i, x, valid, tr = item
-                out = self.infer(x[None], x.shape[:2])
-                out = {k: np.asarray(v) for k, v in out.items()}
-                q_post.put((i, out, valid, tr))
+        def post(item):
+            labels, valid, tr = item
+            return self.postprocess(labels, valid, tr)
 
-        def post_worker():
-            while True:
-                item = q_post.get()
-                if item is None:
-                    return
-                i, out, valid, tr = item
-                results[i] = self.postprocess(out, valid, tr)
-
-        threads = [threading.Thread(target=f)
-                   for f in (pre_worker, infer_worker, post_worker)]
+        pipe = HostPipeline([pre, infer, post], maxsize=4)
         t0 = time.perf_counter()
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        results = pipe.run(images)
         dt = time.perf_counter() - t0
         self.stats["pipelined_tps"] = len(images) / dt
-        return results  # type: ignore[return-value]
+        return results
+
+    # -- micro-batched server (the tentpole path) ------------------------------
+    def _mb_infer(self, key, payloads):
+        stack = np.stack([p[0] for p in payloads])
+        labels = self.infer_labels(stack, [p[1] for p in payloads])
+        return [labels[i] for i in range(len(payloads))]
+
+    def _mb_post(self, payload, labels):
+        _, valid, tr = payload
+        return self.postprocess(labels, valid, tr)
+
+    def start_batched(self) -> "STDService":
+        """Start the micro-batching scheduler (idempotent)."""
+        if self._batcher is None:
+            self._batcher = MicroBatcher(
+                self._mb_infer, self._mb_post,
+                max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
+            )
+            self._batcher.start()
+        return self
+
+    def stop_batched(self) -> None:
+        if self._batcher is not None:
+            self._batcher.stop()
+            self.stats["batching"] = self._batcher.stats
+            self._batcher = None
+
+    def submit(self, img: np.ndarray) -> Future:
+        """Async request: preprocess on the caller thread (the pipeline's
+        pre stage), then enqueue on the bucket's micro-batch."""
+        if self._batcher is None:
+            raise RuntimeError("call start_batched() first")
+        x, valid, tr = self.preprocess(img)
+        return self._batcher.submit(x.shape[:2], (x, valid, tr))
+
+    def serve_batched(self, images: List[np.ndarray], *,
+                      pre_workers: int = 4) -> List[List[Dict]]:
+        """Closed-loop batched serving: preprocess+submit from a small
+        thread pool (so buckets actually fill), gather futures in order."""
+        started_here = self._batcher is None
+        self.start_batched()
+        lat: List[float] = []
+        t0 = time.perf_counter()
+
+        def one(img):
+            t = time.perf_counter()
+            fut = self.submit(img)
+            fut.add_done_callback(
+                lambda f, t=t: lat.append(time.perf_counter() - t)
+            )
+            return fut
+
+        try:
+            with ThreadPoolExecutor(pre_workers) as ex:
+                futs = list(ex.map(one, images))
+            results = [f.result(timeout=600) for f in futs]
+            dt = time.perf_counter() - t0
+            self.stats["batched_tps"] = len(images) / dt
+            self.stats["batched_latency_s"] = lat
+            return results
+        finally:
+            # a failed request must not strand the scheduler threads
+            if started_here:
+                self.stop_batched()
 
 
 def main(argv=None):
@@ -155,20 +264,19 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--width", type=float, default=0.25)
     ap.add_argument("--mode", default="optimized")
+    ap.add_argument("--batched", action="store_true",
+                    help="also run the micro-batched scheduler path")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     args = ap.parse_args(argv)
 
-    from repro.data.images import SyntheticSTDData
+    from repro.data.images import RequestStream
 
-    svc = STDService(width=args.width, mode=args.mode)
-    gen = SyntheticSTDData((96, 128), seed=1)
-    images = []
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        h = int(rng.integers(6, 16)) * 8
-        w = int(rng.integers(6, 16)) * 8
-        images.append(
-            SyntheticSTDData((h, w), seed=i).sample(0, 1)["images"][0]
-        )
+    svc = STDService(width=args.width, mode=args.mode,
+                     max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+    images = RequestStream(
+        args.requests, seed=0, hw_range=((48, 120), (48, 120))
+    ).images()
     # sequential (includes per-bucket compile on first hit)
     t0 = time.perf_counter()
     for img in images:
@@ -176,10 +284,19 @@ def main(argv=None):
     seq_dt = time.perf_counter() - t0
     # pipelined
     out = svc.serve_pipelined(images)
-    print(f"[serve] {args.requests} reqs  sequential {args.requests/seq_dt:.2f} TPS  "
-          f"pipelined {svc.stats['pipelined_tps']:.2f} TPS  "
-          f"median latency {np.median(svc.stats['latency_s'])*1e3:.1f} ms  "
-          f"boxes[0]={len(out[0])}")
+    msg = (f"[serve] {args.requests} reqs  "
+           f"sequential {args.requests/seq_dt:.2f} TPS  "
+           f"pipelined {svc.stats['pipelined_tps']:.2f} TPS")
+    if args.batched:
+        out_b = svc.serve_batched(images)
+        assert [[b["box"] for b in r] for r in out] == \
+               [[b["box"] for b in r] for r in out_b], "batched parity"
+        msg += f"  batched {svc.stats['batched_tps']:.2f} TPS"
+        sizes = [b["n"] for b in svc.stats["batching"]["batches"]]
+        msg += f"  mean batch {np.mean(sizes):.2f}"
+    msg += (f"  median latency {np.median(svc.stats['latency_s'])*1e3:.1f} ms"
+            f"  boxes[0]={len(out[0])}")
+    print(msg)
     return svc.stats
 
 

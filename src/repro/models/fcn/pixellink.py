@@ -63,9 +63,20 @@ class PixelLinkModel:
         """Paper Fig. 4 right branch (BN fold + BFP weight normalization)."""
         return self.engine.normalize_weights(params)
 
-    def apply(self, params, images) -> Dict[str, jax.Array]:
-        """images: (N, H, W, 3) -> {score (N,h,w), links (N,h,w,8), logits}."""
-        out = self.engine(params, images)
+    def apply(self, params, images, *,
+              transposed: bool = False) -> Dict[str, jax.Array]:
+        """images: (N, H, W, 3) -> {score (N,h,w), links (N,h,w,8), logits}.
+
+        Any leading batch size runs through ONE assembled program — the
+        serving scheduler compiles one engine per (bucket, batch) shape.
+        ``transposed=True`` is the paper's §IV.B over-wide mode, threaded
+        down to the engine (kernels transpose, datapath unchanged).
+        """
+        if images.ndim != 4:
+            raise ValueError(
+                f"images must be (N, H, W, 3), got shape {images.shape}"
+            )
+        out = self.engine(params, images, transposed=transposed)
         prob = out["head_prob"].astype(F32)
         return {
             "logits": out["head_logits"].astype(F32),

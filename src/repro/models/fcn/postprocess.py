@@ -8,7 +8,7 @@ host for the serving pipeline.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +79,29 @@ def cc_label(
 
     labels, _, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True), 0))
     return labels
+
+
+def cc_label_batched(
+    score: jax.Array,          # (N, H, W) probabilities
+    links: jax.Array,          # (N, H, W, 8)
+    score_thr: float = 0.5,
+    link_thr: float = 0.5,
+    max_iters: int = 256,
+    valid_mask: Optional[jax.Array] = None,    # (N, H, W) bool
+) -> jax.Array:
+    """Vectorized ``cc_label`` over a leading batch axis -> (N, H, W) int32.
+
+    The per-image propagation is a fixpoint, so the batched while_loop
+    (which iterates until EVERY image converges) yields exactly the
+    per-image result.  ``valid_mask`` zeroes scores outside each image's
+    valid region so bucket padding can never grow or merge components —
+    used by the serving path where images of different true sizes share
+    one padded batch shape.
+    """
+    if valid_mask is not None:
+        score = jnp.where(valid_mask, score, 0.0)
+    f = lambda s, l: cc_label(s, l, score_thr, link_thr, max_iters)
+    return jax.vmap(f)(score, links)
 
 
 def cc_label_numpy(

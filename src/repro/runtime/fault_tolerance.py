@@ -117,28 +117,36 @@ class TrainRunner:
         (tests: restart must be bit-exact)."""
         step = start_step
         end = start_step + n_steps
-        while step < end:
-            if self.guard.requested:
-                self.ckpt.save(step, state, blocking=True,
-                               extra_meta={"reason": "preempted"})
-                return step, state, "preempted"
-            batch = self.batch_fn(step)
-            t0 = time.perf_counter()
-            state, metrics = self.step_fn(state, batch)
-            jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
-            dt = time.perf_counter() - t0
-            step += 1
-            if self.watchdog.observe(step, dt) and self.on_incident:
-                self.on_incident(self.watchdog.incidents[-1])
-            m = dict(metrics)
-            m.update(step=step, dt=dt)
-            self.metrics_log.append(
-                {k: (float(v) if hasattr(v, "__float__") else v)
-                 for k, v in m.items()}
-            )
-            if fail_at is not None and step == fail_at:
-                raise RuntimeError(f"injected failure at step {step}")
-            if step % self.ckpt_every == 0 or step == end:
-                self.ckpt.save(step, state, blocking=(step == end))
+        try:
+            while step < end:
+                if self.guard.requested:
+                    self.ckpt.save(step, state, blocking=True,
+                                   extra_meta={"reason": "preempted"})
+                    return step, state, "preempted"
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+                dt = time.perf_counter() - t0
+                step += 1
+                if self.watchdog.observe(step, dt) and self.on_incident:
+                    self.on_incident(self.watchdog.incidents[-1])
+                m = dict(metrics)
+                m.update(step=step, dt=dt)
+                self.metrics_log.append(
+                    {k: (float(v) if hasattr(v, "__float__") else v)
+                     for k, v in m.items()}
+                )
+                if fail_at is not None and step == fail_at:
+                    raise RuntimeError(f"injected failure at step {step}")
+                if step % self.ckpt_every == 0 or step == end:
+                    self.ckpt.save(step, state, blocking=(step == end))
+        except BaseException:
+            # a crash must not strand an in-flight async save: the restart
+            # resumes from the checkpoint the manifest ALREADY names, so the
+            # write has to land before the exception escapes (and before any
+            # teardown deletes the directory under the writer thread)
+            self.ckpt.wait()
+            raise
         self.ckpt.wait()
         return step, state, "done"

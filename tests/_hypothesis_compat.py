@@ -1,0 +1,105 @@
+"""Seeded stand-in for `hypothesis` so the property tests collect and run
+on a bare interpreter (no pip installs in this environment).
+
+Semantics: ``@given(*strategies)`` replays ``max_examples`` examples drawn
+from a deterministic RNG seeded by the test's qualified name — no
+shrinking, no database, but the same example stream on every run, so a
+failure reproduces exactly.  Only the strategy surface this repo's tests
+use is provided: ``integers``, ``sampled_from``, ``booleans``, ``builds``.
+
+``HYPOTHESIS_COMPAT_MAX_EXAMPLES`` (env) caps the per-test example count
+for quick local iterations.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+_ENV_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES", "0"))
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def builds(target: Callable, **kwargs: _Strategy) -> _Strategy:
+    # sorted draw order keeps the example stream independent of kwargs
+    # insertion order
+    def draw(rng):
+        return target(**{k: kwargs[k].example(rng) for k in sorted(kwargs)})
+
+    return _Strategy(draw)
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            if _ENV_CAP > 0:
+                n = min(n, _ENV_CAP)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([seed, i])
+                )
+                drawn = [s.example(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {fn.__qualname__}"
+                        f"({', '.join(map(repr, drawn))})"
+                    ) from e
+
+        # pytest must not see the original signature, else it treats the
+        # drawn parameters as fixtures
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._compat_given = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Applied above @given: records max_examples on the given-wrapper."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    builds = staticmethod(builds)
+
+
+# `from _hypothesis_compat import strategies as st`
+strategies = _StrategiesNamespace()

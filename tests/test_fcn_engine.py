@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # bare interpreter: seeded fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import Assembler, BFPConfig, FCNEngine, LayerSpec
 from repro.core.microcode import unpack_program, pack_program

@@ -2,7 +2,10 @@
 bounds, program packing, Table II bit-width conformance."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # bare interpreter: seeded fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import microcode as M
 

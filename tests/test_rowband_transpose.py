@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # bare interpreter: seeded fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 from jax import lax
 
 from repro.core import Assembler, FCNEngine, LayerSpec

@@ -115,6 +115,17 @@ class TestErrorFeedback:
 
 
 class TestCheckpoint:
+    def test_orphaned_tmp_dirs_pruned_on_init(self):
+        """A crashed writer's uniquely-suffixed staging dir must be
+        reclaimed by the next manager, not live forever."""
+        with tempfile.TemporaryDirectory() as d:
+            orphan = os.path.join(d, "step_5.tmp-999-0")
+            os.makedirs(orphan)
+            save_checkpoint(d, 7, {"w": jnp.ones((2,))}, blocking=True)
+            mgr = CheckpointManager(d)
+            assert not os.path.exists(orphan)
+            assert mgr.steps() == [7]           # real checkpoints survive
+
     def _tree(self):
         init, update = adamw(1e-2, moment_dtype="bfp8")
         params = {"a": jnp.arange(12.0).reshape(3, 4).astype(jnp.bfloat16),
