@@ -1,13 +1,23 @@
-"""Closed-loop STD serving throughput benchmark (the Fig. 9a comparison):
-sequential vs C4-pipelined vs dynamic micro-batched serving on a seeded
-mixed-resolution request stream.  Reports TPS and p50/p99 per-request
-latency per mode.
+"""STD serving benchmark (the Fig. 9a comparison), two load models:
+
+closed-loop — sequential vs C4-pipelined vs dynamic micro-batched on a
+seeded mixed-resolution request stream; reports TPS and p50/p99
+per-request latency per mode.
+
+open-loop (``--open-loop``) — Poisson arrivals at one or more offered
+rates (``--rates``, requests/s): requests are submitted on a seeded
+exponential-interarrival clock regardless of completions, the way real
+traffic hits a service.  Reports offered vs achieved TPS, p50/p99
+latency, and admission-control sheds per rate — the knee where achieved
+TPS flattens and latency diverges is the service's capacity.
 
 Each mode is warmed on the same stream first (compiles are a one-time
 deployment cost in the paper's serving story; the steady-state pass is
 the measurement), then timed.
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
+      PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
+          --open-loop --rates 8 32 128
 """
 from __future__ import annotations
 
@@ -101,6 +111,87 @@ def bench_serving(requests: int = 32, width: float = 0.25,
     return {"modes": results, **info}
 
 
+def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
+                    width: float = 0.25, buckets=(64, 128),
+                    max_batch: int = 8, max_wait_ms: float = 8.0,
+                    seed: int = 0, max_pending: int = 0,
+                    admission: str = "block", verbose: bool = True):
+    """Open-loop (Poisson arrival) serving: offered load vs achieved TPS
+    and p50/p99 latency per offered rate.  Returns {rate: {...}}."""
+    from repro.data.images import RequestStream
+    from repro.launch.batching import QueueFull, wait_for_samples
+    from repro.launch.serve import STDService
+
+    images = RequestStream(
+        requests, seed=seed,
+        hw_range=((48, max(buckets)), (48, max(buckets))),
+    ).images()
+    svc = STDService(width=width, buckets=tuple(buckets),
+                     max_batch=max_batch, max_wait_ms=max_wait_ms,
+                     engine_cache_capacity=0)
+    # warm every pow2 (bucket, batch) engine the open-loop phase can form
+    # (at low offered rates batches trickle in as 1s and 2s, sizes the
+    # closed-loop pass never compiles) — steady state is the measurement
+    from repro.launch.batching import round_batch
+
+    shapes = {svc.preprocess(img)[0].shape[:2] for img in images}
+    sizes = {round_batch(n, max_batch) for n in range(1, max_batch + 1)}
+    for b in sorted(sizes):
+        for hw in shapes:
+            svc.infer_labels(
+                np.zeros((b, hw[0], hw[1], 3), np.float32),
+                [(hw[0], hw[1])] * b,
+            )
+    # admission control applies to the measured open-loop phase only (the
+    # warm pass must compile every shape, not shed)
+    svc.max_pending = max_pending
+    svc.admission = admission
+
+    results = {}
+    for rate in rates:
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+        svc.start_batched()
+        lat, futs, shed = [], [], 0
+        t0 = time.perf_counter()
+        try:
+            for img, due in zip(images, arrivals):
+                now = time.perf_counter() - t0
+                if due > now:
+                    time.sleep(due - now)
+                t = time.perf_counter()
+                try:
+                    fut = svc.submit(img)
+                except QueueFull:
+                    shed += 1
+                    continue
+                fut.add_done_callback(
+                    lambda f, t=t: lat.append(time.perf_counter() - t)
+                )
+                futs.append(fut)
+            for f in futs:
+                f.result(timeout=600)
+            # callbacks lag result(): let all latency samples land
+            wait_for_samples(lat, len(futs))
+        finally:
+            svc.stop_batched()
+        wall = time.perf_counter() - t0
+        results[rate] = {
+            "offered_tps": rate,
+            "achieved_tps": len(futs) / wall,
+            "completed": len(futs),
+            "shed": shed,
+            "p50_ms": _pctl(lat, 50), "p99_ms": _pctl(lat, 99),
+        }
+        if verbose:
+            r = results[rate]
+            print(f"serve_open_loop,offered {rate:.1f} rps,"
+                  f"achieved {r['achieved_tps']:.2f} TPS,"
+                  f"p50 {r['p50_ms']:.1f} ms,p99 {r['p99_ms']:.1f} ms,"
+                  f"shed {shed}")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
@@ -110,11 +201,25 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pre-workers", type=int, default=4)
+    ap.add_argument("--open-loop", action="store_true",
+                    help="also run Poisson-arrival open-loop sweeps")
+    ap.add_argument("--rates", type=float, nargs="+", default=[8.0, 32.0],
+                    help="offered open-loop rates, requests/s")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="admission-control queue bound (0 = unbounded)")
+    ap.add_argument("--admission", default="block",
+                    choices=["block", "reject"])
     args = ap.parse_args(argv)
     out = bench_serving(args.requests, args.width, tuple(args.buckets),
                         args.max_batch, args.max_wait_ms, args.seed,
                         args.pre_workers)
     assert out["parity"], "batched/pipelined boxes diverged from sequential"
+    if args.open_loop:
+        out["open_loop"] = bench_open_loop(
+            args.requests, tuple(args.rates), args.width,
+            tuple(args.buckets), args.max_batch, args.max_wait_ms,
+            args.seed, args.max_pending, args.admission,
+        )
     return out
 
 

@@ -14,6 +14,10 @@ HYPOTHESIS_COMPAT_MAX_EXAMPLES=5 python -m pytest -q -x -m "not slow" "$@"
 echo "== fast tier (full example counts) =="
 python -m pytest -q -m "not slow" "$@"
 
-echo "== slow tier (multi-process) =="
+echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
+# The pytest process itself sees 8 host CPU devices, activating any
+# in-process multi-device tests; subprocess-based tests override
+# XLA_FLAGS themselves before importing jax, so they are unaffected.
 # exit 5 = nothing collected (e.g. a path argument with no slow tests)
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 python -m pytest -q -m "slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }

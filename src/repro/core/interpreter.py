@@ -198,11 +198,41 @@ class FCNEngine:
             return fuse.upsample2x_conv3x3_fused(x.astype(jnp.float32), w)
         return fuse.upsample2x_conv3x3_naive(x.astype(jnp.float32), w)
 
+    # -- row-banded spatial execution (paper §IV.B across devices) ------------
+    @staticmethod
+    def _spatial_banded(band_ctx, x, k, s, op, out_scale: int = 1):
+        """Run one spatial layer on a row-band shard: exchange enough
+        neighbor rows (``band_ctx.exchange`` — see
+        runtime.collectives.halo_exchange), apply the op with its normal
+        SAME padding on the extended band, slice this band's own output
+        rows back out.  The halo is rounded up to a multiple of 4 so
+        stride phase is always preserved and the Winograd F(4x4) tile
+        grid stays aligned with the full plane wherever the band offset
+        is itself a tile multiple."""
+        if band_ctx is None or k <= s:
+            # k <= s: windows never cross a band boundary (rows % s == 0)
+            return op(x)
+        halo = s * (-(-(k - 1) // s))            # context + stride phase
+        halo = -(-halo // 4) * 4                 # winograd tile alignment
+        bh = x.shape[1]
+        y = op(band_ctx.exchange(x, halo))
+        j0 = halo * out_scale // s
+        return lax.slice_in_dim(y, j0, j0 + bh * out_scale // s, axis=1)
+
     # -- the interpreter loop ---------------------------------------------------
     def __call__(
-        self, params, x: jax.Array, *, transposed: bool = False
+        self, params, x: jax.Array, *, transposed: bool = False,
+        band_ctx=None,
     ) -> Dict[str, jax.Array]:
         """x: (N, H, W, C) matching the program's input plane.
+
+        ``band_ctx`` enables row-banded execution (paper §IV.B spread
+        over a device mesh): ``x`` is one horizontal band of a larger
+        plane and every spatial layer halo-exchanges its boundary rows
+        through ``band_ctx.exchange(x, halo)`` so each band computes the
+        full plane's rows (the multi-device generalization of
+        core.rowband.conv2d_banded — see runtime/executor.py; exact up
+        to Winograd tile-regrouping float noise in "optimized" mode).
 
         ``transposed=True`` is the paper's §IV.B over-wide-image mode: the
         SAME microcode program runs on the transposed plane with
@@ -255,11 +285,22 @@ class FCNEngine:
             p = params.get(name, {}) if name else {}
             lt = LayerType(mc.layer_type)
             if lt == LayerType.CONV:
-                y = self._conv(xin, p, mc, spec)
+                y = self._spatial_banded(
+                    band_ctx, xin, mc.kernel_size, mc.stride_n,
+                    lambda xb: self._conv(xb, p, mc, spec),
+                )
             elif lt == LayerType.POOL:
-                y = self._pool(xin, mc, spec)
+                y = self._spatial_banded(
+                    band_ctx, xin, 2 if mc.kernel == 0 else 3, mc.stride_n,
+                    lambda xb: self._pool(xb, mc, spec),
+                )
             elif lt == LayerType.UPSAMPLE:
-                y = self._upsample(xin, p, mc, spec)
+                y = self._spatial_banded(
+                    band_ctx, xin,
+                    1 if spec.upsample_mode == "nearest" else 3, 1,
+                    lambda xb: self._upsample(xb, p, mc, spec),
+                    out_scale=2,
+                )
             else:
                 op = ExtOp(mc.ext_opcode)
                 if op == ExtOp.SIGMOID:

@@ -15,6 +15,15 @@ at the true image border.
 
 ``band_schedule`` reproduces the paper's sizing rule: pick rows-per-round
 so (rows x W x Cin x bytes) fits the buffer budget.
+
+``program_halo_rows`` extends the single-layer halo rule to a whole
+assembled :class:`~repro.core.assembler.Program`: it walks the microcode
+and returns an upper bound on the input-row receptive-field radius of
+any program output — the analysis/sizing view of banding (how much
+context an end-to-end band would need).  The multi-device row-band
+ExecutionPlan (runtime/executor.py) does NOT use one end-to-end halo: it
+exchanges each layer's own kernel halo instead
+(FCNEngine._spatial_banded), which is exact and moves far fewer rows.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 
@@ -72,6 +82,72 @@ def conv2d_banded(
         )
         outs.append(y)
     return jnp.concatenate(outs, axis=1)
+
+
+def program_halo_rows(program) -> int:
+    """Input-row receptive-field radius (upper bound) of a whole program
+    — an analysis tool (how much context one end-to-end band would
+    need); the executor's RowBand plan exchanges per-layer halos
+    instead.
+
+    Tracks per-address (jump, radius) in input-row units: a conv/pool of
+    kernel k grows the radius by (k-1)*jump (covering SAME-padding
+    asymmetry), a strided layer multiplies the jump, an upsample halves
+    it.  Concat reads mirror the interpreter's adjacent-extent walk; the
+    residual cache/add register and binary adds take the max over their
+    inputs.  Unknown producers fall back to the worst (jump, radius) seen
+    so far, so the result can only over-estimate — a larger-than-needed
+    halo costs bandwidth, never correctness.
+    """
+    from .assembler import STORAGE_BYTES
+    from .microcode import ExtOp, LayerType, ResOp
+
+    info = {program.input_addr: (1.0, 0.0)}     # addr -> (jump, radius)
+
+    def worst():
+        return (max(j for j, _ in info.values()),
+                max(r for _, r in info.values()))
+
+    def read(addr, want_ch):
+        j = r = 0.0
+        cur, got = addr, 0
+        while got < want_ch:
+            if cur not in info or cur not in program.addr_shapes:
+                return worst()
+            ji, ri = info[cur]
+            j, r = max(j, ji), max(r, ri)
+            h, w, c = program.addr_shapes[cur]
+            got += c
+            cur += h * w * c * STORAGE_BYTES
+        return j, r
+
+    cache = (1.0, 0.0)
+    for idx, mc in enumerate(program.words):
+        spec = program.layer_specs[idx]
+        j, r = read(mc.in_addr, mc.in_ch)
+        lt = LayerType(mc.layer_type)
+        if lt == LayerType.CONV:
+            r += (mc.kernel_size - 1) * j
+            j *= mc.stride_n
+        elif lt == LayerType.POOL:
+            k = 2 if mc.kernel == 0 else 3
+            r += (k - 1) * j
+            j *= mc.stride_n
+        elif lt == LayerType.UPSAMPLE:
+            j /= 2.0
+            if spec.upsample_mode == "fused":
+                r += 2 * j                       # the fused 3x3 conv
+        elif ExtOp(mc.ext_opcode) == ExtOp.ADD and mc.ext_addr2:
+            j2, r2 = read(mc.ext_addr2, mc.in_ch)
+            j, r = max(j, j2), max(r, r2)
+        if mc.res_op == ResOp.CACHE:
+            cache = (j, r)
+        elif mc.res_op == ResOp.ADD:
+            j, r = max(j, cache[0]), max(r, cache[1])
+        info[mc.out_addr] = (j, r)
+
+    out_addrs = program.outputs.values()
+    return int(np.ceil(max(info[a][1] for a in out_addrs)))
 
 
 def bytes_per_round(h0: int, h1: int, w: int, cin: int, k: int,

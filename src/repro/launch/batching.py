@@ -8,6 +8,9 @@ that makes that possible behind an async `submit() -> Future` API:
     (H, W) shape, so every image in a batch shares one compiled engine),
   * a bucket flushes when it reaches ``max_batch`` ("full") or when its
     oldest request has waited ``max_wait_ms`` ("timeout"),
+  * admission control: ``max_pending`` bounds the total queued depth so
+    overload sheds ("reject" -> :class:`QueueFull`) or backpressures
+    ("block") instead of growing the queue without bound,
   * one infer thread serializes device work (batches from different
     buckets interleave, never overlap), and a small post pool scatters
     per-item results back to futures — so host preprocess (caller
@@ -26,6 +29,24 @@ import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, Hashable, List, Optional
+
+
+class QueueFull(RuntimeError):
+    """submit() rejected: the scheduler's pending queue is at
+    ``max_pending`` and the admission policy is "reject"."""
+
+
+def wait_for_samples(samples, n: int, timeout_s: float = 5.0) -> None:
+    """Block until ``samples`` holds ``n`` entries (or timeout).
+
+    Future.set_result wakes result() waiters *before* running
+    done-callbacks, so latency lists appended from callbacks can lag the
+    final result() return — tail percentiles computed immediately would
+    see a truncated sample set.  Callers collect results, then wait here
+    before reading the samples."""
+    deadline = time.perf_counter() + timeout_s
+    while len(samples) < n and time.perf_counter() < deadline:
+        time.sleep(0.001)
 
 
 def round_batch(n: int, max_batch: int, mode: str = "pow2") -> int:
@@ -100,17 +121,24 @@ class MicroBatcher:
         max_wait_ms: float = 5.0,
         queue_depth: int = 4,
         post_workers: int = 2,
+        max_pending: int = 0,
+        admission: str = "block",
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if admission not in ("block", "reject"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.infer_fn = infer_fn
         self.post_fn = post_fn
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.queue_depth = queue_depth
         self.post_workers = post_workers
+        self.max_pending = max_pending           # 0 = unbounded
+        self.admission = admission
         self._cond = threading.Condition()
         self._pending: Dict[Hashable, deque] = {}
+        self._n_pending = 0                      # total items across buckets
         self._stop = False
         self._running = False
         self.stats: Dict[str, Any] = {
@@ -118,6 +146,8 @@ class MicroBatcher:
             "flush_full": 0,
             "flush_timeout": 0,
             "flush_drain": 0,
+            "submitted": 0,
+            "rejected": 0,            # admission-control sheds
             "item_latency_s": [],     # submit -> future resolved
         }
 
@@ -160,12 +190,27 @@ class MicroBatcher:
 
     # -- request side ----------------------------------------------------------
     def submit(self, key: Hashable, payload: Any) -> Future:
+        """Enqueue one request.  At ``max_pending`` queued items the
+        admission policy applies: "reject" raises :class:`QueueFull`
+        immediately (load shedding), "block" waits for the scheduler to
+        drain a batch (backpressure on the caller thread)."""
         fut: Future = Future()
-        item = _Item(key, payload, fut, time.perf_counter())
         with self._cond:
             if self._stop or not self._running:
                 raise RuntimeError("MicroBatcher is not running")
+            while self.max_pending > 0 and self._n_pending >= self.max_pending:
+                if self.admission == "reject":
+                    self.stats["rejected"] += 1
+                    raise QueueFull(
+                        f"pending queue at max_pending={self.max_pending}"
+                    )
+                self._cond.wait()
+                if self._stop or not self._running:
+                    raise RuntimeError("MicroBatcher is not running")
+            item = _Item(key, payload, fut, time.perf_counter())
             self._pending.setdefault(key, deque()).append(item)
+            self._n_pending += 1
+            self.stats["submitted"] += 1
             self._cond.notify_all()
         return fut
 
@@ -193,7 +238,10 @@ class MicroBatcher:
                 if ready_key is not None:
                     dq = self._pending[ready_key]
                     n = min(len(dq), self.max_batch)
-                    return ready_key, reason, [dq.popleft() for _ in range(n)]
+                    items = [dq.popleft() for _ in range(n)]
+                    self._n_pending -= n
+                    self._cond.notify_all()      # wake blocked submitters
+                    return ready_key, reason, items
                 if self._stop:
                     return None
                 self._cond.wait(

@@ -8,11 +8,16 @@ paper's throughput tricks:
   * dynamic micro-batching: an async request queue groups images by
     resolution bucket and runs one compiled batched engine per bucket
     (launch/batching.py), flushing on ``max_batch`` or ``max_wait_ms``,
+    with optional bounded-queue admission control (reject/block),
   * module-level pipelining (C4): host preprocess / device FCN / host
     CC-postprocess overlap as pipeline stages, so stage i of image n
     overlaps stage i+1 of image n-1,
-  * an engine LRU keyed by (bucket, batch) so compile cost is paid once
-    per shape,
+  * engine compilation delegated to the ExecutionPlan layer
+    (runtime/executor.py): one EngineFactory holds the models, params,
+    and a (bucket, batch, plan)-keyed LRU; the service just picks a plan
+    — SingleDevice by default, DataParallel over a mesh's "data" axis,
+    and the §IV.B RowBand plan for over-tall images that exceed the
+    largest bucket,
   * TPS + latency accounting (feeds the Fig. 9a benchmark).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --width 0.25
@@ -25,103 +30,139 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.batching import LRUCache, MicroBatcher, round_batch
+from repro.launch.batching import MicroBatcher, round_batch, wait_for_samples
+from repro.runtime.executor import (
+    EngineFactory,
+    ExecutionPlan,
+    RowBand,
+    SingleDevice,
+    plan_batch_multiple,
+    row_band_height_unit,
+)
 from repro.runtime.pipeline import HostPipeline
 
 MAX_WIDTH = 4096          # the paper's width limit
 
 
 def bucket_hw(h: int, w: int, buckets: Tuple[int, ...]) -> Tuple[int, int]:
-    bh = min(b for b in buckets if b >= h)
-    bw = min(b for b in buckets if b >= w)
-    return bh, bw
+    """Padded bucket shape for an (h, w) image.  Oversize dimensions
+    round up to the next multiple of the largest bucket instead of
+    raising, so the compiled-shape count stays bounded and over-tall
+    inputs can route to the row-band plan.  Dimensions beyond the
+    paper's MAX_WIDTH limit fail fast — a single huge request must not
+    stall the infer thread with an unbounded compile/allocation."""
+    top = max(buckets)
+
+    def one(v: int) -> int:
+        if v <= top:
+            return min(b for b in buckets if b >= v)
+        if v > MAX_WIDTH:
+            raise ValueError(
+                f"image dimension {v} exceeds the serving limit "
+                f"{MAX_WIDTH} (paper §IV.B width bound)"
+            )
+        return -(-v // top) * top
+
+    return one(h), one(w)
 
 
 class STDService:
-    """Per-bucket model cache + (bucket, batch)-keyed compiled engines +
-    the sequential / pipelined / micro-batched serving modes."""
+    """Bucketed STD serving on top of the ExecutionPlan layer: plan
+    selection + request scheduling here, all engine compilation in
+    runtime.executor.EngineFactory (sequential / pipelined /
+    micro-batched serving modes)."""
 
     def __init__(self, width: float = 0.25, mode: str = "optimized",
                  buckets: Tuple[int, ...] = (64, 128, 256),
                  score_thr: float = 0.5, link_thr: float = 0.5,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
                  batch_round: str = "pow2",
-                 engine_cache_capacity: int = 16):
+                 engine_cache_capacity: int = 16,
+                 plan: Optional[ExecutionPlan] = None,
+                 tall_plan: Optional[RowBand] = None,
+                 max_pending: int = 0, admission: str = "block"):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        self.plan: ExecutionPlan = plan if plan is not None else SingleDevice()
+        m = plan_batch_multiple(self.plan)
+        if max_batch % m:
+            raise ValueError(
+                f"max_batch={max_batch} must be a multiple of the plan's "
+                f"data-parallel width {m}, or padded batches would exceed "
+                f"the configured maximum"
+            )
         self.buckets = buckets
-        self.score_thr = score_thr
-        self.link_thr = link_thr
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.batch_round = batch_round
-        self._models: Dict[Tuple[int, int], Any] = {}
-        self._params: Dict[Tuple[int, int], Any] = {}
-        self._engines = LRUCache(engine_cache_capacity)
+        self.tall_plan = tall_plan
+        self.max_pending = max_pending
+        self.admission = admission
         self._lock = threading.Lock()
         self._batcher: Optional[MicroBatcher] = None
         self._width = width
         self._mode = mode
-        self._mk = lambda hw: PixelLinkModel(STDConfig(
-            backbone="vgg16", width=width, image_size=hw,
-            merge_ch=(16, 16, 8), mode=mode, storage_fp16=False,
-        ))
+        self.factory = EngineFactory(
+            lambda hw: PixelLinkModel(STDConfig(
+                backbone="vgg16", width=width, image_size=hw,
+                merge_ch=(16, 16, 8), mode=mode, storage_fp16=False,
+            )),
+            score_thr=score_thr, link_thr=link_thr,
+            capacity=engine_cache_capacity,
+        )
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
                                       "transposed": 0}
 
-    def _get(self, hw: Tuple[int, int]):
-        with self._lock:
-            if hw not in self._models:
-                m = self._mk(hw)
-                self._models[hw] = m
-                self._params[hw] = m.init_params(jax.random.PRNGKey(0))
-            return self._models[hw], self._params[hw]
+    @property
+    def _engines(self):
+        """The factory's compiled-engine LRU (tests/introspection)."""
+        return self.factory.engines
 
-    def _run_fn(self, hw: Tuple[int, int], batch: int):
-        """Compiled engine for one (bucket, batch) shape: FCN forward +
-        batched CC labeling with per-image valid-region masking, one jit
-        cache entry per shape (LRU-evicted)."""
-        key = (hw, batch)
-        fn = self._engines.get(key)
-        if fn is not None:
-            return fn
-        model, _ = self._get(hw)
-        from repro.models.fcn import postprocess as pp
+    def _plan_for(self, hw: Tuple[int, int]) -> ExecutionPlan:
+        """Plan routing: over-tall padded shapes (taller than the largest
+        bucket) go to the §IV.B row-band plan when one is configured;
+        everything else uses the service default."""
+        if self.tall_plan is not None and hw[0] > max(self.buckets):
+            return self.tall_plan
+        return self.plan
 
-        def run(params, x, valid_q):
-            out = model.apply(params, x)
-            h, w = out["score"].shape[1:]
-            mask = (
-                (jnp.arange(h)[None, :, None] < valid_q[:, 0, None, None])
-                & (jnp.arange(w)[None, None, :] < valid_q[:, 1, None, None])
-            )
-            return pp.cc_label_batched(
-                out["score"], out["links"], self.score_thr, self.link_thr,
-                valid_mask=mask,
-            )
-
-        fn = jax.jit(run)
-        self._engines.put(key, fn)
-        return fn
+    def _tall_height(self, bh: int) -> int:
+        """Padded height for an over-tall image headed to the row-band
+        plan: rounded up so every band divides evenly through the stride
+        pyramid (bands x deepest cumulative stride) — without this,
+        clamped heights like 192 on an 8-band mesh would be rejected by
+        the plan compiler."""
+        top = max(self.buckets)
+        unit = row_band_height_unit(
+            self.tall_plan, self.factory.deepest_stride((top, top))
+        )
+        return -(-bh // unit) * unit
 
     # -- stages ---------------------------------------------------------------
     def preprocess(self, img: np.ndarray):
         """Random-size handling: transpose trick + bucket padding."""
         h, w = img.shape[:2]
         transposed = False
-        if w > MAX_WIDTH >= h:                      # paper §IV.B
+        # paper §IV.B over-wide rule; with a row-band plan configured the
+        # same trick also turns any over-wide image into an over-tall one
+        # so it rides the banded plan instead of a one-off monolithic
+        # engine at a clamped width
+        if w > MAX_WIDTH >= h or (
+            self.tall_plan is not None and w > max(self.buckets) >= h
+        ):
             img = np.transpose(img, (1, 0, 2))
             h, w = w, h
             transposed = True
             with self._lock:
                 self.stats["transposed"] += 1
         bh, bw = bucket_hw(h, w, self.buckets)
+        if self.tall_plan is not None and bh > max(self.buckets):
+            bh = self._tall_height(bh)
         pad = np.zeros((bh, bw, 3), np.float32)
         pad[:h, :w] = img
         return pad, (h, w), transposed
@@ -134,9 +175,12 @@ class STDService:
         rounding); trailing slots are zero images whose labels are
         discarded by the caller.
         """
-        hw = stack.shape[1:3]
+        hw = tuple(stack.shape[1:3])
+        plan = self._plan_for(hw)
         n_live = len(valid_hws)
         b = round_batch(n_live, self.max_batch, self.batch_round)
+        m = plan_batch_multiple(plan)            # data-parallel divisibility
+        b = -(-b // m) * m
         if b > n_live:
             stack = np.concatenate(
                 [stack, np.zeros((b - n_live,) + stack.shape[1:],
@@ -145,8 +189,8 @@ class STDService:
         valid_q = np.zeros((b, 2), np.int32)
         for i, (vh, vw) in enumerate(valid_hws):
             valid_q[i] = (vh // 4, vw // 4)
-        fn = self._run_fn(tuple(hw), b)
-        _, params = self._get(tuple(hw))
+        fn = self.factory.plan_fn(hw, b, plan)
+        params = self.factory.params(hw)
         return np.asarray(fn(params, jnp.asarray(stack),
                              jnp.asarray(valid_q)))
 
@@ -210,6 +254,7 @@ class STDService:
             self._batcher = MicroBatcher(
                 self._mb_infer, self._mb_post,
                 max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
+                max_pending=self.max_pending, admission=self.admission,
             )
             self._batcher.start()
         return self
@@ -250,6 +295,7 @@ class STDService:
                 futs = list(ex.map(one, images))
             results = [f.result(timeout=600) for f in futs]
             dt = time.perf_counter() - t0
+            wait_for_samples(lat, len(futs))
             self.stats["batched_tps"] = len(images) / dt
             self.stats["batched_latency_s"] = lat
             return results

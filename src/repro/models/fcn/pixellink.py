@@ -59,24 +59,39 @@ class PixelLinkModel:
     def init_params(self, key):
         return self.engine.init_params(key)
 
+    def for_plane(self, image_size: Tuple[int, int]) -> "PixelLinkModel":
+        """The same architecture reassembled for another input plane.
+
+        The model is fully convolutional, so parameters transfer 1:1 —
+        this is how the row-band ExecutionPlan builds its per-band
+        program (band + halo rows) while sharing the full-plane weights
+        (runtime/executor.py)."""
+        return PixelLinkModel(
+            dataclasses.replace(self.cfg, image_size=tuple(image_size))
+        )
+
     def normalize_weights(self, params):
         """Paper Fig. 4 right branch (BN fold + BFP weight normalization)."""
         return self.engine.normalize_weights(params)
 
-    def apply(self, params, images, *,
-              transposed: bool = False) -> Dict[str, jax.Array]:
+    def apply(self, params, images, *, transposed: bool = False,
+              band_ctx=None) -> Dict[str, jax.Array]:
         """images: (N, H, W, 3) -> {score (N,h,w), links (N,h,w,8), logits}.
 
         Any leading batch size runs through ONE assembled program — the
         serving scheduler compiles one engine per (bucket, batch) shape.
         ``transposed=True`` is the paper's §IV.B over-wide mode, threaded
         down to the engine (kernels transpose, datapath unchanged).
+        ``band_ctx`` is the §IV.B row-band mode: ``images`` is one
+        horizontal band of a taller plane and spatial layers
+        halo-exchange boundary rows (see runtime/executor.py RowBand).
         """
         if images.ndim != 4:
             raise ValueError(
                 f"images must be (N, H, W, 3), got shape {images.shape}"
             )
-        out = self.engine(params, images, transposed=transposed)
+        out = self.engine(params, images, transposed=transposed,
+                          band_ctx=band_ctx)
         prob = out["head_prob"].astype(F32)
         return {
             "logits": out["head_logits"].astype(F32),

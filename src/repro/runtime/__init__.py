@@ -1,3 +1,4 @@
-from . import collectives, fault_tolerance, pipeline, sharding
+from . import collectives, executor, fault_tolerance, pipeline, sharding
 
-__all__ = ["collectives", "fault_tolerance", "pipeline", "sharding"]
+__all__ = ["collectives", "executor", "fault_tolerance", "pipeline",
+           "sharding"]

@@ -9,6 +9,13 @@ optim.grad_utils keeps the update sequence unbiased.
 ``latency_hiding_flags`` — the XLA flags the launcher sets so the SPMD
 scheduler overlaps these collectives with compute (the paper's C4
 module-level overlap, compiler edition).
+
+``halo_exchange`` — the paper's §IV.B row-band overlap rows as a
+collective: each device holds a horizontal band of an image plane and
+receives the boundary rows it needs from its spatial neighbors (ppermute
+when the halo fits in one neighbor band, all_gather + slice when the
+receptive field spans several bands).  The row-band ExecutionPlan
+(runtime/executor.py) builds on it.
 """
 from __future__ import annotations
 
@@ -65,6 +72,61 @@ def psum_bytes_model(
     q = nbytes_f32 // 4 * mb + nbytes_f32 // 4 // block_size
     gather = (n_devices - 1) * q // n_devices
     return ring, gather
+
+
+def halo_exchange(
+    x: jax.Array,
+    axis_name: str,
+    halo: int,
+    *,
+    axis: int = 1,
+    axis_size: int = 0,
+) -> jax.Array:
+    """Extend a row-band shard by ``halo`` rows from each neighbor.
+
+    Must run inside a shard_map region where ``x`` is the local band of a
+    plane split along ``axis`` over mesh axis ``axis_name``.  Returns the
+    band extended to ``band + 2*halo`` rows; positions beyond the true
+    plane border are zero (matching SAME-padding semantics, so a banded
+    conv stack equals the full-plane one — see core.rowband).
+
+    When ``halo`` fits inside one neighbor band the exchange is two
+    ppermutes of edge slices (the paper's load-next-band-while-computing
+    overlap rows); otherwise it degrades to an all_gather + local slice.
+    ``axis_size`` may be passed to avoid a psum when statically known.
+    """
+    if halo <= 0:
+        return x
+    n = axis_size or jax.lax.psum(1, axis_name)
+    band = x.shape[axis]
+    idx = jax.lax.axis_index(axis_name)
+    if n == 1:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (halo, halo)
+        return jnp.pad(x, pad)
+    if halo <= band:
+        down = [(i, (i + 1) % n) for i in range(n)]   # band i -> i+1
+        up = [(i, (i - 1) % n) for i in range(n)]     # band i -> i-1
+        top = jax.lax.ppermute(          # my predecessor's bottom rows
+            jax.lax.slice_in_dim(x, band - halo, band, axis=axis),
+            axis_name, down,
+        )
+        bot = jax.lax.ppermute(          # my successor's top rows
+            jax.lax.slice_in_dim(x, 0, halo, axis=axis),
+            axis_name, up,
+        )
+        # zero the wrap-around halos at the true plane borders
+        top = top * (idx > 0).astype(x.dtype)
+        bot = bot * (idx < n - 1).astype(x.dtype)
+        return jnp.concatenate([top, x, bot], axis=axis)
+    # wide halo: reconstruct the plane, slice my extended band out of it
+    full = jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (halo, halo)
+    full = jnp.pad(full, pad)
+    return jax.lax.dynamic_slice_in_dim(
+        full, idx * band, band + 2 * halo, axis=axis
+    )
 
 
 def latency_hiding_flags() -> str:

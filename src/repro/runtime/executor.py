@@ -1,0 +1,308 @@
+"""ExecutionPlan layer: one seam from assembled microcode to multi-device
+serving.
+
+The paper stacks three levels of parallelism over one fixed FCN datapath;
+each level is an :class:`ExecutionPlan` target here, and every compiled
+serving engine flows through :class:`EngineFactory` — so the scheduler
+(launch/serve.py, launch/batching.py) never touches jit/shard_map
+directly and later scaling work (multi-pod meshes, heterogeneous buckets,
+async dispatch) only has to add plan types:
+
+  * :class:`SingleDevice` — the baseline engine: the paper's batch-level
+    parallelism only (one chip runs a (bucket, batch) shape end to end).
+  * :class:`DataParallel` — the paper's batch level spread over a device
+    mesh: shard_map splits the micro-batch over the mesh's "data" axis,
+    each shard runs the full microcode program plus the CC-labeling tail
+    on its slice (per-image ops, so per-shard == global).
+  * :class:`RowBand` — the paper's §IV.B row-wise segmentation across
+    devices: the image plane is split into horizontal bands over the
+    "model" axis and each device runs the SAME program assembled at the
+    band plane.  Every spatial layer halo-exchanges its own boundary
+    rows (runtime/collectives.halo_exchange driven by
+    FCNEngine._spatial_banded) — the multi-device generalization of
+    core/rowband.conv2d_banded, layer by layer.  Band outputs equal the
+    full plane mathematically; in "reference" mode (and wherever band
+    offsets are Winograd-tile-aligned) they are bit-identical, while
+    misaligned offsets in "optimized" mode regroup Winograd tiles and
+    can shift scores by float-reassociation noise (~1e-6) — far inside
+    the margin of any realistic 0.5-threshold decision.  This is the
+    route for over-tall images that exceed the largest resolution
+    bucket.
+
+    Module-level pipelining (paper C4) stays host-side — HostPipeline /
+    MicroBatcher overlap preprocess, device compute, and postprocess
+    around whichever plan is active.
+
+Plans are frozen, hashable dataclasses: the serving engine LRU keys on
+``(bucket_hw, batch, plan)`` and a mesh change is a new compiled engine,
+never silent reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.batching import LRUCache
+from repro.runtime.collectives import halo_exchange
+from repro.runtime.sharding import (
+    fcn_activation_specs,
+    mesh_axis_sizes,
+    shard_map_compat,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleDevice:
+    """Run the whole (bucket, batch) shape on the default device."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DataParallel:
+    """Split the batch over ``mesh`` axis ``axis`` (paper batch level)."""
+
+    mesh: Mesh
+    axis: str = "data"
+
+
+@dataclasses.dataclass(frozen=True)
+class RowBand:
+    """Split image rows into bands over ``mesh`` axis ``axis`` (paper
+    §IV.B).  ``bands`` must equal the axis size (0 = take it from the
+    mesh); per-layer halo widths are derived from each layer's kernel."""
+
+    mesh: Mesh
+    axis: str = "model"
+    bands: int = 0
+
+
+ExecutionPlan = Union[SingleDevice, DataParallel, RowBand]
+
+
+class _BandCtx:
+    """Halo-exchange hook handed to FCNEngine for row-banded execution
+    (keeps core/ free of collective imports)."""
+
+    def __init__(self, axis_name: str, n_bands: int):
+        self.axis_name = axis_name
+        self.n_bands = n_bands
+
+    def exchange(self, x, halo: int):
+        return halo_exchange(
+            x, self.axis_name, halo, axis=1, axis_size=self.n_bands
+        )
+
+
+def plan_batch_multiple(plan: ExecutionPlan) -> int:
+    """Batch sizes compiled for ``plan`` must be a multiple of this."""
+    if isinstance(plan, DataParallel):
+        return mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+    return 1
+
+
+def row_band_height_unit(plan: RowBand, deepest_stride: int) -> int:
+    """Heights compiled for a RowBand plan must be a multiple of this:
+    every band must divide evenly through the whole stride pyramid."""
+    n = mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+    bands = plan.bands or n
+    return bands * deepest_stride
+
+
+def describe_plan(plan: ExecutionPlan) -> str:
+    if isinstance(plan, DataParallel):
+        n = mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+        return f"data_parallel[{plan.axis}={n}]"
+    if isinstance(plan, RowBand):
+        n = plan.bands or mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+        return f"row_band[{plan.axis}={n}]"
+    return "single_device"
+
+
+class EngineFactory:
+    """Compiles (bucket_hw, batch, plan) -> engine callable, with the
+    model/param caches and the compiled-engine LRU behind one lock.
+
+    ``make_model(hw)`` builds the STD model for one input plane (its
+    parameters must be plane-invariant — fully convolutional — so one
+    per-bucket param set serves every band plane derived from it).  The
+    compiled callable is ``fn(params, x, valid_q) -> labels``: FCN
+    forward, per-image valid-region masking, batched CC labeling.
+    """
+
+    def __init__(
+        self,
+        make_model: Callable[[Tuple[int, int]], Any],
+        *,
+        score_thr: float = 0.5,
+        link_thr: float = 0.5,
+        capacity: int = 16,
+    ):
+        self.make_model = make_model
+        self.score_thr = score_thr
+        self.link_thr = link_thr
+        # model/param caches are LRU-bounded like the engines: oversize
+        # inputs clamp to an open-ended set of padded shapes (bucket_hw),
+        # so unbounded dicts would leak a parameter tree per shape
+        self._models = LRUCache(capacity)
+        self._params = LRUCache(capacity)
+        self._engines = LRUCache(capacity)
+        self._lock = threading.Lock()
+        self.stats: Dict[str, Any] = {"compiled": []}
+
+    # -- model / param caches --------------------------------------------------
+    def model(self, hw: Tuple[int, int]):
+        hw = tuple(hw)
+        with self._lock:
+            m = self._models.get(hw)
+            if m is None:
+                m = self.make_model(hw)
+                self._models.put(hw, m)
+            return m
+
+    def params(self, hw: Tuple[int, int]):
+        """Parameters for one plane — deterministic (PRNGKey(0)), so an
+        LRU-evicted entry rebuilds identically."""
+        model = self.model(tuple(hw))
+        with self._lock:
+            p = self._params.get(tuple(hw))
+            if p is None:
+                p = model.init_params(jax.random.PRNGKey(0))
+                self._params.put(tuple(hw), p)
+            return p
+
+    def deepest_stride(self, hw: Tuple[int, int]) -> int:
+        """Deepest cumulative stride of the program assembled at ``hw``
+        (architecture property — plane-independent for divisible planes)."""
+        prog = self.model(tuple(hw)).program
+        return max(hw[0] // max(h, 1) for h, _, _ in prog.addr_shapes.values())
+
+    # -- engines ---------------------------------------------------------------
+    def plan_fn(self, hw: Tuple[int, int], batch: int,
+                plan: ExecutionPlan) -> Callable:
+        """The compiled engine for one (bucket, batch, plan) key."""
+        key = (tuple(hw), int(batch), plan)
+        fn = self._engines.get(key)
+        if fn is not None:
+            return fn
+        fn = self._compile(tuple(hw), int(batch), plan)
+        self.stats["compiled"].append(
+            {"hw": tuple(hw), "batch": int(batch),
+             "plan": describe_plan(plan)}
+        )
+        self._engines.put(key, fn)
+        return fn
+
+    def _label_tail(self, score, links, valid_q):
+        from repro.models.fcn import postprocess as pp
+
+        h, w = score.shape[1:]
+        mask = (
+            (jnp.arange(h)[None, :, None] < valid_q[:, 0, None, None])
+            & (jnp.arange(w)[None, None, :] < valid_q[:, 1, None, None])
+        )
+        return pp.cc_label_batched(
+            score, links, self.score_thr, self.link_thr, valid_mask=mask
+        )
+
+    def _compile(self, hw, batch, plan) -> Callable:
+        if isinstance(plan, SingleDevice):
+            return self._compile_single(hw)
+        if isinstance(plan, DataParallel):
+            return self._compile_data_parallel(hw, batch, plan)
+        if isinstance(plan, RowBand):
+            return self._compile_row_band(hw, plan)
+        raise TypeError(f"unknown execution plan {plan!r}")
+
+    def _compile_single(self, hw) -> Callable:
+        model = self.model(hw)
+
+        def run(params, x, valid_q):
+            out = model.apply(params, x)
+            return self._label_tail(out["score"], out["links"], valid_q)
+
+        return jax.jit(run)
+
+    def _compile_data_parallel(self, hw, batch, plan) -> Callable:
+        n = mesh_axis_sizes(plan.mesh).get(plan.axis)
+        if n is None:
+            raise ValueError(
+                f"mesh {plan.mesh.axis_names} has no axis {plan.axis!r}"
+            )
+        if batch % n:
+            raise ValueError(
+                f"batch {batch} not divisible by {plan.axis}={n}; round "
+                f"with plan_batch_multiple()"
+            )
+        model = self.model(hw)
+        specs = fcn_activation_specs(batch_axis=plan.axis)
+
+        def shard(params, x, valid_q):
+            out = model.apply(params, x)
+            return self._label_tail(out["score"], out["links"], valid_q)
+
+        return jax.jit(shard_map_compat(
+            shard, plan.mesh,
+            in_specs=(P(), specs["image"], P(plan.axis)),
+            out_specs=specs["labels"],
+        ))
+
+    def _compile_row_band(self, hw, plan) -> Callable:
+        H, W = hw
+        n = mesh_axis_sizes(plan.mesh).get(plan.axis)
+        if n is None:
+            raise ValueError(
+                f"mesh {plan.mesh.axis_names} has no axis {plan.axis!r}"
+            )
+        bands = plan.bands or n
+        if bands != n:
+            raise ValueError(
+                f"bands={plan.bands} must equal mesh axis {plan.axis}={n}"
+            )
+        if H % bands:
+            raise ValueError(f"H={H} not divisible into {bands} bands")
+        band_h = H // bands
+        # the band must divide evenly through the whole stride pyramid:
+        # every device's local rows stay integral at the deepest scale
+        deepest = self.deepest_stride(hw)
+        if band_h % deepest:
+            raise ValueError(
+                f"band height {band_h} must be a multiple of the deepest "
+                f"cumulative stride {deepest} (H={H}, bands={bands})"
+            )
+        # each device runs the SAME program assembled at the band plane;
+        # every spatial layer halo-exchanges its own boundary rows
+        # (FCNEngine._spatial_banded), so outputs are exact per band
+        model = self.model(hw)
+        band_model = (model.for_plane((band_h, W))
+                      if hasattr(model, "for_plane")
+                      else self.make_model((band_h, W)))
+        ctx = _BandCtx(plan.axis, bands)
+        specs = fcn_activation_specs(rows_axis=plan.axis)
+
+        def shard(params, x):
+            out = band_model.apply(params, x, band_ctx=ctx)
+            return out["score"], out["links"]
+
+        sm = shard_map_compat(
+            shard, plan.mesh,
+            in_specs=(P(), specs["image"]),
+            out_specs=(specs["score"], specs["links"]),
+        )
+
+        def run(params, x, valid_q):
+            score, links = sm(params, x)
+            return self._label_tail(score, links, valid_q)
+
+        return jax.jit(run)
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def engines(self) -> LRUCache:
+        return self._engines
+
+    def __len__(self) -> int:
+        return len(self._engines)

@@ -9,7 +9,12 @@ this module resolves *activation* and *input* shardings:
     (sequence sharding — the LM analogue of the paper's §IV.B row-wise
     image segmentation);
   * logits/activations constrained so the vocab-TP lm_head output stays
-    sharded over "model".
+    sharded over "model";
+  * FCN serving activations (NHWC image planes and the score/link/label
+    maps derived from them): batch over "data" for data-parallel plans,
+    rows over "model" for row-band plans — fcn_activation_specs is
+    consumed by runtime.executor's ExecutionPlans; fcn_batch_axis is the
+    divisibility rule for callers picking a batch axis themselves.
 """
 from __future__ import annotations
 
@@ -99,6 +104,31 @@ def logits_spec(mesh: Mesh, batch: int, seq: int) -> P:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def fcn_batch_axis(mesh: Mesh, batch: int, axis: str = "data") -> Optional[str]:
+    """The mesh axis an FCN batch can shard over, or None (replicate)."""
+    n = mesh_axis_sizes(mesh).get(axis, 1)
+    return axis if n > 1 and batch % n == 0 else None
+
+
+def fcn_activation_specs(
+    batch_axis: Optional[str] = None, rows_axis: Optional[str] = None
+) -> Dict[str, P]:
+    """PartitionSpecs for the FCN serving activations.
+
+    NHWC inputs and the 1/4-scale maps share one layout decision: the
+    batch dim over ``batch_axis`` (data-parallel plans, paper's batch
+    level) and/or the row dim over ``rows_axis`` (row-band plans, paper
+    §IV.B).  Keys: "image" (N,H,W,C), "score" (N,h,w), "links"
+    (N,h,w,8), "labels" (N,h,w).
+    """
+    return {
+        "image": P(batch_axis, rows_axis, None, None),
+        "score": P(batch_axis, rows_axis, None),
+        "links": P(batch_axis, rows_axis, None, None),
+        "labels": P(batch_axis, rows_axis, None),
+    }
 
 
 def activation_constrainer(mesh: Mesh, global_batch: int,

@@ -11,7 +11,8 @@ except ImportError:            # bare interpreter: seeded fallback shim
 from jax import lax
 
 from repro.core import Assembler, FCNEngine, LayerSpec
-from repro.core.rowband import band_schedule, conv2d_banded
+from repro.core.rowband import (band_schedule, conv2d_banded,
+                                program_halo_rows)
 
 
 def sym_conv(x, w, stride=1):
@@ -66,6 +67,54 @@ class TestRowBand:
         full = eng(params, x)["c"]
         banded = conv2d_banded(x, params["c"]["w"], n_bands=4) + params["c"]["b"]
         np.testing.assert_allclose(banded, full, atol=1e-5)
+
+
+class TestProgramHaloRows:
+    def _prog(self, specs, hw=(32, 32)):
+        outs = [specs[-1].name]
+        return Assembler(hw + (3,)).assemble(specs, outputs=outs)
+
+    def test_single_conv_bound(self):
+        """One 3x3 conv: true radius 1, conservative bound (k-1)*jump=2."""
+        prog = self._prog([LayerSpec("c", "conv", ["input"], out_ch=4,
+                                     kernel=3)])
+        assert 1 <= program_halo_rows(prog) <= 2
+
+    def test_1x1_conv_needs_no_halo(self):
+        prog = self._prog([LayerSpec("c", "conv", ["input"], out_ch=4,
+                                     kernel=1)])
+        assert program_halo_rows(prog) == 0
+
+    def test_radius_grows_with_depth_and_stride(self):
+        shallow = self._prog([
+            LayerSpec("c1", "conv", ["input"], out_ch=4, kernel=3),
+        ])
+        deep = self._prog([
+            LayerSpec("c1", "conv", ["input"], out_ch=4, kernel=3),
+            LayerSpec("p1", "pool", ["c1"], kernel=2, stride=2),
+            LayerSpec("c2", "conv", ["p1"], out_ch=4, kernel=3),
+            LayerSpec("c3", "conv", ["c2"], out_ch=4, kernel=3),
+        ])
+        r1 = program_halo_rows(shallow)
+        r2 = program_halo_rows(deep)
+        # after the stride-2 pool each 3x3 conv reads at jump 2
+        assert r2 > r1
+        assert r2 >= r1 + 1 + 2 * 2 * 2
+
+    def test_concat_takes_max_over_branches(self):
+        # two branches concat-read by the head: radius >= deeper branch
+        specs = [
+            LayerSpec("a", "conv", ["input"], out_ch=4, kernel=3),
+            LayerSpec("b1", "conv", ["input"], out_ch=4, kernel=3),
+            LayerSpec("b2", "conv", ["b1"], out_ch=4, kernel=3),
+            LayerSpec("h", "conv", ["a", "b2"], out_ch=4, kernel=1),
+        ]
+        deep_only = self._prog([
+            LayerSpec("b1", "conv", ["input"], out_ch=4, kernel=3),
+            LayerSpec("b2", "conv", ["b1"], out_ch=4, kernel=3),
+        ])
+        assert (program_halo_rows(self._prog(specs))
+                >= program_halo_rows(deep_only))
 
 
 class TestTransposedMode:

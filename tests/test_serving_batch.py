@@ -97,6 +97,56 @@ class TestMicroBatcher:
             futs = [mb.submit("a", i) for i in range(4)]
             assert [f.result(timeout=10) for f in futs] == [0, 10, 20, 30]
 
+    def test_admission_reject_sheds_at_max_pending(self):
+        from repro.launch.batching import QueueFull
+
+        # no flush can fire (batch never full, timeout far away), so the
+        # queue deterministically sits at max_pending when the 3rd
+        # request arrives
+        mb = MicroBatcher(lambda k, ps: ps, max_batch=8,
+                          max_wait_ms=10_000, max_pending=2,
+                          admission="reject").start()
+        try:
+            futs = [mb.submit("a", 0), mb.submit("a", 1)]
+            with pytest.raises(QueueFull):
+                mb.submit("a", 2)
+        finally:
+            mb.stop()                     # drains the two admitted items
+        assert mb.stats["rejected"] == 1
+        assert mb.stats["submitted"] == 2
+        assert [f.result(timeout=5) for f in futs] == [0, 1]
+
+    def test_admission_block_applies_backpressure(self):
+        release = threading.Event()
+
+        def infer(key, payloads):
+            release.wait(5)
+            return payloads
+
+        done = []
+        # max_batch=1 + queue_depth=1 + blocked infer: one batch in
+        # flight, one queued, the scheduler stuck handing off a third,
+        # a fourth item pending -> the fifth submit must block
+        with MicroBatcher(infer, max_batch=1, max_wait_ms=10_000,
+                          queue_depth=1, max_pending=1,
+                          admission="block") as mb:
+            futs = [mb.submit("a", i) for i in range(4)]
+
+            def blocked_client():
+                futs.append(mb.submit("a", 4))
+                done.append(time.perf_counter())
+
+            t = threading.Thread(target=blocked_client)
+            t.start()
+            time.sleep(0.2)
+            assert not done               # backpressure held the caller
+            release.set()                 # infer drains -> space frees
+            t.join(timeout=5)
+            assert done
+            assert [f.result(timeout=5) for f in futs] == list(range(5))
+        assert mb.stats["rejected"] == 0
+        assert mb.stats["submitted"] == 5
+
     def test_concurrent_submitters(self):
         results = {}
 
