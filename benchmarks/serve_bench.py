@@ -15,9 +15,22 @@ Each mode is warmed on the same stream first (compiles are a one-time
 deployment cost in the paper's serving story; the steady-state pass is
 the measurement), then timed.
 
+``--plan`` picks the ExecutionPlan the service runs on a host device
+mesh (``--mesh-shape DATA MODEL``): ``single`` (default), ``data``
+(batch over "data"), ``rowband`` (rows over "model"), ``grid`` (both at
+once — the composed §IV plan), or ``auto`` (cost-model routing per
+bucket via runtime/planner.py).  For row-banded plans the buckets are
+rounded up to the band-height unit.  Every run also prints a
+``serve_plan`` line per bucket: the plan the cost model would choose and
+its estimated step cost — under ``auto`` that choice is also what
+actually ran.
+
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
           --open-loop --rates 8 32 128
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.serve_bench --requests 16 \
+          --plan grid --mesh-shape 2 4 --open-loop --rates 8
 """
 from __future__ import annotations
 
@@ -35,23 +48,129 @@ def _pctl(xs, q):
     return float(np.percentile(np.asarray(xs), q) * 1e3) if len(xs) else 0.0
 
 
+DEEPEST_STRIDE = 32      # vgg16 stride pyramid -> band-height unit factor
+                         # (assumption checked against the real model by
+                         # _check_band_units once the service exists)
+
+
+def _check_band_units(svc, planner, plan_kind, buckets):
+    """The bucket rounding in _plan_setup assumed DEEPEST_STRIDE; verify
+    it against the stride pyramid of the model the service actually
+    built, so a backbone/merge change fails here with a clear message
+    instead of a ValueError from the plan compiler mid-sweep."""
+    if plan_kind not in ("rowband", "grid"):
+        return
+    top = max(buckets)
+    deepest = svc.factory.deepest_stride((top, top))
+    unit = planner.height_unit(deepest)
+    bad = [b for b in buckets if b % unit]
+    if bad:
+        raise SystemExit(
+            f"buckets {bad} are not multiples of the band-height unit "
+            f"{unit} (model deepest stride {deepest} x {planner.model_n} "
+            f"bands != assumed {DEEPEST_STRIDE}); adjust --buckets or "
+            f"--mesh-shape"
+        )
+
+
+def _plan_setup(plan_kind, mesh_shape, buckets, max_batch):
+    """Resolve ``--plan``/``--mesh-shape`` into STDService kwargs, the
+    cost-model planner used for the per-bucket report column, and the
+    (possibly band-unit-rounded) buckets."""
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.executor import DataParallel, GridPlan, RowBand
+    from repro.runtime.planner import Planner
+
+    n = jax.device_count()
+    if mesh_shape is None:
+        mesh_shape = {
+            "single": (1, 1),
+            "data": (n, 1),
+            "rowband": (1, n),
+        }.get(plan_kind, (2, n // 2) if n % 2 == 0 and n > 1 else (1, n))
+    mesh = make_host_mesh(tuple(mesh_shape), ("data", "model"))
+    planner = Planner(mesh)
+    kw = {}
+    if plan_kind == "data":
+        kw["plan"] = DataParallel(mesh)
+    elif plan_kind == "rowband":
+        kw["plan"] = RowBand(mesh)
+    elif plan_kind == "grid":
+        kw["plan"] = GridPlan(mesh)
+    elif plan_kind == "auto":
+        kw["planner"] = planner
+    elif plan_kind != "single":
+        raise SystemExit(f"unknown --plan {plan_kind!r}")
+    if plan_kind in ("rowband", "grid"):
+        # every bucket height must divide into bands x deepest stride
+        unit = planner.height_unit(DEEPEST_STRIDE)
+        buckets = tuple(sorted({-(-b // unit) * unit for b in buckets}))
+    dn = planner.data_n if plan_kind in ("data", "grid", "auto") else 1
+    if max_batch % max(dn, 1):
+        raise SystemExit(
+            f"--max-batch {max_batch} must be a multiple of the mesh "
+            f"data axis {dn} for --plan {plan_kind}"
+        )
+    return kw, planner, tuple(buckets)
+
+
+def report_plan_choices(svc, planner, max_batch, verbose=True):
+    """The planner-choice column: for every bucket the service compiled,
+    what the cost model routes it to (and at what estimated step cost)
+    next to what actually ran.  Under --plan auto the service records
+    its live routing decisions in stats["plan_choices"] — report those
+    (they were made at the batches that actually formed); for fixed
+    plans fall back to a hypothetical choice at max_batch."""
+    from repro.runtime.executor import describe_plan
+
+    planner.bind_features(svc._plan_features)
+    routed = svc.stats.get("plan_choices", {})
+    ran = {}
+    for e in svc.factory.stats["compiled"]:
+        ran.setdefault(e["hw"], set()).add(e["plan"])
+    rows = {}
+    for hw in sorted(ran):
+        choice = routed.get(hw) or describe_plan(
+            planner.choose(hw, max_batch))
+        # the estimate must belong to the plan named on the row — a
+        # routed choice may not be the argmin (force_banded, or routing
+        # happened at a different live batch)
+        table = planner.costs(hw, max_batch)
+        kind = choice.split("[", 1)[0]
+        est_us = table.get(kind, min(table.values())) * 1e6
+        rows[hw] = {"planner": choice, "est_us": est_us,
+                    "ran": sorted(ran[hw])}
+        if verbose:
+            print(f"serve_plan,bucket={hw[0]}x{hw[1]},"
+                  f"planner={choice},est {est_us:.0f} us,"
+                  f"ran={'/'.join(sorted(ran[hw]))}")
+    return rows
+
+
 def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
-                  pre_workers: int = 4, verbose: bool = True):
+                  pre_workers: int = 4, verbose: bool = True,
+                  plan_kind: str = "single", mesh_shape=None):
     """Returns {mode: {tps, p50_ms, p99_ms}} plus parity/batching info."""
     from repro.data.images import RequestStream
     from repro.launch.serve import STDService
 
     if requests < 1:
         raise SystemExit("--requests must be >= 1")
+    extra_kw, planner, buckets = _plan_setup(
+        plan_kind, mesh_shape, tuple(buckets), max_batch
+    )
     images = RequestStream(
         requests, seed=seed,
         hw_range=((48, max(buckets)), (48, max(buckets))),
     ).images()
     svc = STDService(width=width, buckets=tuple(buckets),
                      max_batch=max_batch, max_wait_ms=max_wait_ms,
-                     engine_cache_capacity=0)      # hold every warm shape
+                     engine_cache_capacity=0,      # hold every warm shape
+                     **extra_kw)
+    _check_band_units(svc, planner, plan_kind, buckets)
 
     results = {}
 
@@ -108,6 +227,7 @@ def bench_serving(requests: int = 32, width: float = 0.25,
         print(f"serve_info,parity={parity},mean_batch={info['mean_batch']:.2f},"
               f"flush_full={info['flush_full']},"
               f"flush_timeout={info['flush_timeout']}")
+    info["plans"] = report_plan_choices(svc, planner, max_batch, verbose)
     return {"modes": results, **info}
 
 
@@ -115,20 +235,25 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
                     width: float = 0.25, buckets=(64, 128),
                     max_batch: int = 8, max_wait_ms: float = 8.0,
                     seed: int = 0, max_pending: int = 0,
-                    admission: str = "block", verbose: bool = True):
+                    admission: str = "block", verbose: bool = True,
+                    plan_kind: str = "single", mesh_shape=None):
     """Open-loop (Poisson arrival) serving: offered load vs achieved TPS
     and p50/p99 latency per offered rate.  Returns {rate: {...}}."""
     from repro.data.images import RequestStream
     from repro.launch.batching import QueueFull, wait_for_samples
     from repro.launch.serve import STDService
 
+    extra_kw, planner, buckets = _plan_setup(
+        plan_kind, mesh_shape, tuple(buckets), max_batch
+    )
     images = RequestStream(
         requests, seed=seed,
         hw_range=((48, max(buckets)), (48, max(buckets))),
     ).images()
     svc = STDService(width=width, buckets=tuple(buckets),
                      max_batch=max_batch, max_wait_ms=max_wait_ms,
-                     engine_cache_capacity=0)
+                     engine_cache_capacity=0, **extra_kw)
+    _check_band_units(svc, planner, plan_kind, buckets)
     # warm every pow2 (bucket, batch) engine the open-loop phase can form
     # (at low offered rates batches trickle in as 1s and 2s, sizes the
     # closed-loop pass never compiles) — steady state is the measurement
@@ -189,6 +314,7 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
                   f"achieved {r['achieved_tps']:.2f} TPS,"
                   f"p50 {r['p50_ms']:.1f} ms,p99 {r['p99_ms']:.1f} ms,"
                   f"shed {shed}")
+    results["plans"] = report_plan_choices(svc, planner, max_batch, verbose)
     return results
 
 
@@ -209,16 +335,37 @@ def main(argv=None):
                     help="admission-control queue bound (0 = unbounded)")
     ap.add_argument("--admission", default="block",
                     choices=["block", "reject"])
+    ap.add_argument("--plan", default="single",
+                    choices=["single", "data", "rowband", "grid", "auto"],
+                    help="ExecutionPlan: fixed single/data/rowband/grid, "
+                         "or auto (cost-model routing per bucket)")
+    ap.add_argument("--mesh-shape", type=int, nargs=2, default=None,
+                    metavar=("DATA", "MODEL"),
+                    help="host mesh (data, model) axis sizes; default "
+                         "derives from the visible device count")
     args = ap.parse_args(argv)
     out = bench_serving(args.requests, args.width, tuple(args.buckets),
                         args.max_batch, args.max_wait_ms, args.seed,
-                        args.pre_workers)
-    assert out["parity"], "batched/pipelined boxes diverged from sequential"
+                        args.pre_workers, plan_kind=args.plan,
+                        mesh_shape=args.mesh_shape)
+    if args.plan == "auto":
+        # routing is batch-dependent, so sequential (batch 1) and
+        # micro-batched modes may legitimately run DIFFERENT plans for
+        # one bucket; banded vs single engines can differ by ~1e-6
+        # Winograd tile-regrouping noise, enough to flip a box at an
+        # unlucky 0.5-threshold score — report instead of failing
+        if not out["parity"]:
+            print("serve_warn,auto-mode modes routed to different plans; "
+                  "box parity not guaranteed bit-exact")
+    else:
+        assert out["parity"], \
+            "batched/pipelined boxes diverged from sequential"
     if args.open_loop:
         out["open_loop"] = bench_open_loop(
             args.requests, tuple(args.rates), args.width,
             tuple(args.buckets), args.max_batch, args.max_wait_ms,
             args.seed, args.max_pending, args.admission,
+            plan_kind=args.plan, mesh_shape=args.mesh_shape,
         )
     return out
 

@@ -14,10 +14,20 @@ HYPOTHESIS_COMPAT_MAX_EXAMPLES=5 python -m pytest -q -x -m "not slow" "$@"
 echo "== fast tier (full example counts) =="
 python -m pytest -q -m "not slow" "$@"
 
+echo "== tier-2: GridPlan parity + cost-model planner on an 8-device (2x4) host mesh =="
+# Grid-parity property suite and planner routing: the gridplan tests
+# spawn 8-device (2x4 data x model) subprocesses themselves; the fast
+# planner suite rides along so a planner regression fails this stage
+# even when invoked with path args that skip the fast tiers.
+python -m pytest -q -m "slow" tests/test_gridplan.py
+python -m pytest -q tests/test_planner.py
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override
 # XLA_FLAGS themselves before importing jax, so they are unaffected.
 # exit 5 = nothing collected (e.g. a path argument with no slow tests)
+# (test_gridplan.py already ran in the grid stage above)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-python -m pytest -q -m "slow" "$@" || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }
+python -m pytest -q -m "slow" --ignore=tests/test_gridplan.py "$@" \
+  || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }

@@ -150,6 +150,58 @@ def program_halo_rows(program) -> int:
     return int(np.ceil(max(info[a][1] for a in out_addrs)))
 
 
+def program_band_costs(program, *, dtype_bytes: int = 4) -> dict:
+    """Per-image cost features of running an assembled program row-banded
+    over a device mesh — the inputs to the serving cost model
+    (runtime/planner.py):
+
+      ``flops``      forward FLOPs of one image at this plane (MACs x 2
+                     for conv/upsample, one op per output element for
+                     pool/ext words),
+      ``halo_bytes`` bytes ONE band exchanges with its neighbors per
+                     image when every spatial layer with k > s swaps its
+                     own boundary rows — mirrors
+                     FCNEngine._spatial_banded's halo rule (stride-phase
+                     rounding, then up to a multiple of 4 rows), two
+                     directions per layer,
+      ``halo_layers`` how many layers exchange at all (each one is a
+                     ppermute pair on the wire).
+
+    Pure microcode-shape arithmetic: no params, no device work.
+    """
+    from .microcode import ExtOp, LayerType
+
+    flops = 0.0
+    halo_bytes = 0.0
+    halo_layers = 0
+    for idx, mc in enumerate(program.words):
+        spec = program.layer_specs[idx]
+        oh, ow, oc = program.addr_shapes[mc.out_addr]
+        lt = LayerType(mc.layer_type)
+        if lt == LayerType.CONV:
+            k, s = mc.kernel_size, mc.stride_n
+            flops += 2.0 * k * k * mc.in_ch * oc * oh * ow
+        elif lt == LayerType.POOL:
+            k, s = (2 if mc.kernel == 0 else 3), mc.stride_n
+            flops += float(k * k * oh * ow * oc)
+        elif lt == LayerType.UPSAMPLE:
+            k, s = (1 if spec.upsample_mode == "nearest" else 3), 1
+            if spec.upsample_mode != "nearest":
+                flops += 2.0 * k * k * mc.in_ch * oc * (oh // 2) * (ow // 2)
+        else:
+            if ExtOp(mc.ext_opcode) != ExtOp.NONE:
+                flops += float(oh * ow * oc)
+            continue
+        if k > s:                       # this layer halo-exchanges
+            halo = s * (-(-(k - 1) // s))
+            halo = -(-halo // 4) * 4
+            iw = ow * s if lt != LayerType.UPSAMPLE else ow // 2
+            halo_bytes += 2.0 * halo * iw * mc.in_ch * dtype_bytes
+            halo_layers += 1
+    return {"flops": flops, "halo_bytes": halo_bytes,
+            "halo_layers": halo_layers}
+
+
 def bytes_per_round(h0: int, h1: int, w: int, cin: int, k: int,
                     stride: int, dtype_bytes: int = 2) -> int:
     """Input bytes loaded for one round (halo included) — the load-vs-

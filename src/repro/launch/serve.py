@@ -16,8 +16,15 @@ paper's throughput tricks:
     (runtime/executor.py): one EngineFactory holds the models, params,
     and a (bucket, batch, plan)-keyed LRU; the service just picks a plan
     — SingleDevice by default, DataParallel over a mesh's "data" axis,
-    and the §IV.B RowBand plan for over-tall images that exceed the
-    largest bucket,
+    the §IV.B RowBand plan for over-tall images that exceed the largest
+    bucket, or the composed GridPlan (batch over "data" AND rows over
+    "model" at once),
+  * plan routing: either the fixed rules (service-wide ``plan`` +
+    ``tall_plan`` for over-tall images) or a cost model
+    (runtime/planner.py ``Planner``) that picks a plan PER BUCKET from
+    FLOPs + halo bytes + batch-split occupancy — heterogeneous buckets
+    in one service then route to different plans through the same
+    engine LRU,
   * TPS + latency accounting (feeds the Fig. 9a benchmark).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --width 0.25
@@ -37,12 +44,13 @@ from repro.launch.batching import MicroBatcher, round_batch, wait_for_samples
 from repro.runtime.executor import (
     EngineFactory,
     ExecutionPlan,
-    RowBand,
     SingleDevice,
+    band_height_unit,
+    describe_plan,
     plan_batch_multiple,
-    row_band_height_unit,
 )
 from repro.runtime.pipeline import HostPipeline
+from repro.runtime.planner import Planner, features_for_program
 
 MAX_WIDTH = 4096          # the paper's width limit
 
@@ -82,14 +90,24 @@ class STDService:
                  batch_round: str = "pow2",
                  engine_cache_capacity: int = 16,
                  plan: Optional[ExecutionPlan] = None,
-                 tall_plan: Optional[RowBand] = None,
+                 tall_plan: Optional[ExecutionPlan] = None,
+                 planner: Optional[Planner] = None,
                  max_pending: int = 0, admission: str = "block"):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.plan: ExecutionPlan = plan if plan is not None else SingleDevice()
+        self.planner = planner
         m = plan_batch_multiple(self.plan)
+        if tall_plan is not None:
+            # tall_plan may be any plan type now, including data-sharded
+            # ones whose padded batches must also stay within max_batch
+            m = max(m, plan_batch_multiple(tall_plan))
+        if planner is not None:
+            # the planner may route any bucket to a data-parallel or grid
+            # plan, whose padded batches must stay within max_batch
+            m = max(m, planner.data_n)
         if max_batch % m:
             raise ValueError(
                 f"max_batch={max_batch} must be a multiple of the plan's "
@@ -115,32 +133,58 @@ class STDService:
             score_thr=score_thr, link_thr=link_thr,
             capacity=engine_cache_capacity,
         )
+        if planner is not None:
+            planner.bind_features(self._plan_features)
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
-                                      "transposed": 0}
+                                      "transposed": 0, "plan_choices": {}}
 
     @property
     def _engines(self):
         """The factory's compiled-engine LRU (tests/introspection)."""
         return self.factory.engines
 
-    def _plan_for(self, hw: Tuple[int, int]) -> ExecutionPlan:
-        """Plan routing: over-tall padded shapes (taller than the largest
-        bucket) go to the §IV.B row-band plan when one is configured;
-        everything else uses the service default."""
-        if self.tall_plan is not None and hw[0] > max(self.buckets):
+    def _plan_features(self, hw: Tuple[int, int]):
+        """Cost-model features for one bucket, from the same assembled
+        program the engine will run (planner wiring)."""
+        model = self.factory.model(tuple(hw))
+        return features_for_program(
+            model.program, self.factory.deepest_stride(tuple(hw))
+        )
+
+    def _plan_for(self, hw: Tuple[int, int], batch: int = 1) -> ExecutionPlan:
+        """Plan routing.  With a cost-model planner configured, every
+        bucket is routed by estimated step cost — over-tall shapes
+        (taller than the largest bucket) are restricted to the
+        row-banded kinds (RowBand/GridPlan), matching the §IV.B rule.
+        Without one, the fixed rules apply: over-tall shapes go to
+        ``tall_plan`` when configured, everything else to the service
+        default."""
+        over_tall = hw[0] > max(self.buckets)
+        if self.planner is not None:
+            plan = self.planner.choose(hw, batch, force_banded=over_tall)
+            self.stats["plan_choices"][tuple(hw)] = describe_plan(plan)
+            return plan
+        if self.tall_plan is not None and over_tall:
             return self.tall_plan
         return self.plan
 
+    def _routes_banded(self) -> bool:
+        """Whether over-tall/over-wide images can ride a row-banded plan
+        (fixed tall_plan rule or planner routing)."""
+        return self.tall_plan is not None or self.planner is not None
+
     def _tall_height(self, bh: int) -> int:
-        """Padded height for an over-tall image headed to the row-band
+        """Padded height for an over-tall image headed to a row-banded
         plan: rounded up so every band divides evenly through the stride
         pyramid (bands x deepest cumulative stride) — without this,
         clamped heights like 192 on an 8-band mesh would be rejected by
         the plan compiler."""
         top = max(self.buckets)
-        unit = row_band_height_unit(
-            self.tall_plan, self.factory.deepest_stride((top, top))
-        )
+        deepest = self.factory.deepest_stride((top, top))
+        if self.planner is not None:
+            unit = self.planner.height_unit(deepest)
+        else:
+            unit = band_height_unit(self.tall_plan, deepest)
         return -(-bh // unit) * unit
 
     # -- stages ---------------------------------------------------------------
@@ -148,12 +192,13 @@ class STDService:
         """Random-size handling: transpose trick + bucket padding."""
         h, w = img.shape[:2]
         transposed = False
-        # paper §IV.B over-wide rule; with a row-band plan configured the
-        # same trick also turns any over-wide image into an over-tall one
-        # so it rides the banded plan instead of a one-off monolithic
-        # engine at a clamped width
+        # paper §IV.B over-wide rule; with banded routing configured
+        # (fixed tall_plan or cost-model planner) the same trick also
+        # turns any over-wide image into an over-tall one so it rides a
+        # row-banded plan instead of a one-off monolithic engine at a
+        # clamped width
         if w > MAX_WIDTH >= h or (
-            self.tall_plan is not None and w > max(self.buckets) >= h
+            self._routes_banded() and w > max(self.buckets) >= h
         ):
             img = np.transpose(img, (1, 0, 2))
             h, w = w, h
@@ -161,7 +206,7 @@ class STDService:
             with self._lock:
                 self.stats["transposed"] += 1
         bh, bw = bucket_hw(h, w, self.buckets)
-        if self.tall_plan is not None and bh > max(self.buckets):
+        if self._routes_banded() and bh > max(self.buckets):
             bh = self._tall_height(bh)
         pad = np.zeros((bh, bw, 3), np.float32)
         pad[:h, :w] = img
@@ -176,9 +221,9 @@ class STDService:
         discarded by the caller.
         """
         hw = tuple(stack.shape[1:3])
-        plan = self._plan_for(hw)
         n_live = len(valid_hws)
         b = round_batch(n_live, self.max_batch, self.batch_round)
+        plan = self._plan_for(hw, b)
         m = plan_batch_multiple(plan)            # data-parallel divisibility
         b = -(-b // m) * m
         if b > n_live:

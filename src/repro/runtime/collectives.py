@@ -94,7 +94,23 @@ def halo_exchange(
     ppermutes of edge slices (the paper's load-next-band-while-computing
     overlap rows); otherwise it degrades to an all_gather + local slice.
     ``axis_size`` may be passed to avoid a psum when statically known.
+
+    ``axis_name`` must be ONE named mesh axis: on a multi-axis mesh
+    (e.g. the 2-D data x model serving mesh of the GridPlan in
+    runtime/executor.py) every collective here — ppermute, all_gather,
+    axis_index — addresses positions along that axis only, so shards
+    that differ on any *other* mesh axis never exchange rows (each
+    data-parallel batch shard keeps its own plane).  A tuple of axis
+    names would silently break that addressing (perm indices and
+    axis_index would refer to the flattened product axis), so it is
+    rejected up front.
     """
+    if not isinstance(axis_name, str):
+        raise TypeError(
+            f"halo_exchange needs a single named mesh axis, got "
+            f"{axis_name!r}; on a multi-axis mesh pass the band axis "
+            f"only (rows are never exchanged across other axes)"
+        )
     if halo <= 0:
         return x
     n = axis_size or jax.lax.psum(1, axis_name)

@@ -29,6 +29,18 @@ async dispatch) only has to add plan types:
     route for over-tall images that exceed the largest resolution
     bucket.
 
+  * :class:`GridPlan` — the paper's two levels stacked in ONE compiled
+    engine (§IV batch-level x row-wise segmentation): shard_map over a
+    2-D mesh splits the micro-batch over the "data" axis *and* the image
+    rows over the "model" axis simultaneously, so each model-row of
+    devices runs the band-plane program on its batch shard with
+    per-layer halo exchange along "model" only (halo_exchange never
+    crosses the "data" axis — see runtime/collectives).  Activations
+    follow the composed 2-D specs from runtime.sharding
+    (fcn_activation_specs with both axes set).  This is the full-pod
+    shape: a (data=N, model=M) mesh serves N batch shards of M-banded
+    planes per step.
+
     Module-level pipelining (paper C4) stays host-side — HostPipeline /
     MicroBatcher overlap preprocess, device compute, and postprocess
     around whichever plan is active.
@@ -80,7 +92,20 @@ class RowBand:
     bands: int = 0
 
 
-ExecutionPlan = Union[SingleDevice, DataParallel, RowBand]
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Batch over ``data_axis`` x rows over ``model_axis`` in one
+    shard_map (paper §IV batch level + row-wise segmentation stacked).
+    ``bands`` must equal the model-axis size (0 = take it from the
+    mesh); batch sizes must be a multiple of the data-axis size."""
+
+    mesh: Mesh
+    data_axis: str = "data"
+    model_axis: str = "model"
+    bands: int = 0
+
+
+ExecutionPlan = Union[SingleDevice, DataParallel, RowBand, GridPlan]
 
 
 class _BandCtx:
@@ -101,15 +126,33 @@ def plan_batch_multiple(plan: ExecutionPlan) -> int:
     """Batch sizes compiled for ``plan`` must be a multiple of this."""
     if isinstance(plan, DataParallel):
         return mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+    if isinstance(plan, GridPlan):
+        return mesh_axis_sizes(plan.mesh).get(plan.data_axis, 1)
     return 1
 
 
+def plan_bands(plan: ExecutionPlan) -> int:
+    """Number of row bands a plan splits the image plane into (1 for
+    non-banded plans)."""
+    if isinstance(plan, RowBand):
+        return plan.bands or mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
+    if isinstance(plan, GridPlan):
+        return plan.bands or mesh_axis_sizes(plan.mesh).get(
+            plan.model_axis, 1
+        )
+    return 1
+
+
+def band_height_unit(plan: ExecutionPlan, deepest_stride: int) -> int:
+    """Heights compiled for a row-banded plan (RowBand or GridPlan) must
+    be a multiple of this: every band must divide evenly through the
+    whole stride pyramid (``H % (bands * deepest_stride) == 0``)."""
+    return plan_bands(plan) * deepest_stride
+
+
 def row_band_height_unit(plan: RowBand, deepest_stride: int) -> int:
-    """Heights compiled for a RowBand plan must be a multiple of this:
-    every band must divide evenly through the whole stride pyramid."""
-    n = mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
-    bands = plan.bands or n
-    return bands * deepest_stride
+    """Back-compat alias for :func:`band_height_unit`."""
+    return band_height_unit(plan, deepest_stride)
 
 
 def describe_plan(plan: ExecutionPlan) -> str:
@@ -119,6 +162,11 @@ def describe_plan(plan: ExecutionPlan) -> str:
     if isinstance(plan, RowBand):
         n = plan.bands or mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
         return f"row_band[{plan.axis}={n}]"
+    if isinstance(plan, GridPlan):
+        sizes = mesh_axis_sizes(plan.mesh)
+        dn = sizes.get(plan.data_axis, 1)
+        mn = plan.bands or sizes.get(plan.model_axis, 1)
+        return f"grid[{plan.data_axis}={dn},{plan.model_axis}={mn}]"
     return "single_device"
 
 
@@ -215,6 +263,8 @@ class EngineFactory:
             return self._compile_data_parallel(hw, batch, plan)
         if isinstance(plan, RowBand):
             return self._compile_row_band(hw, plan)
+        if isinstance(plan, GridPlan):
+            return self._compile_grid(hw, batch, plan)
         raise TypeError(f"unknown execution plan {plan!r}")
 
     def _compile_single(self, hw) -> Callable:
@@ -251,7 +301,6 @@ class EngineFactory:
         ))
 
     def _compile_row_band(self, hw, plan) -> Callable:
-        H, W = hw
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
         if n is None:
             raise ValueError(
@@ -262,33 +311,33 @@ class EngineFactory:
             raise ValueError(
                 f"bands={plan.bands} must equal mesh axis {plan.axis}={n}"
             )
-        if H % bands:
-            raise ValueError(f"H={H} not divisible into {bands} bands")
-        band_h = H // bands
-        # the band must divide evenly through the whole stride pyramid:
-        # every device's local rows stay integral at the deepest scale
-        deepest = self.deepest_stride(hw)
-        if band_h % deepest:
-            raise ValueError(
-                f"band height {band_h} must be a multiple of the deepest "
-                f"cumulative stride {deepest} (H={H}, bands={bands})"
-            )
-        # each device runs the SAME program assembled at the band plane;
-        # every spatial layer halo-exchanges its own boundary rows
-        # (FCNEngine._spatial_banded), so outputs are exact per band
+        return self._compile_banded(plan.mesh, hw, bands, plan.axis)
+
+    def _compile_banded(self, mesh, hw, bands: int, model_axis: str,
+                        batch_axis=None) -> Callable:
+        """The shared row-banded engine: each device runs the SAME
+        program assembled at the band plane, and every spatial layer
+        halo-exchanges its own boundary rows along ``model_axis``
+        (FCNEngine._spatial_banded), so outputs are exact per band.
+        With ``batch_axis`` the batch dim is sharded too (GridPlan);
+        halo exchange still moves along ``model_axis`` only."""
+        W = hw[1]
+        band_h = self._band_height(hw, bands)
         model = self.model(hw)
         band_model = (model.for_plane((band_h, W))
                       if hasattr(model, "for_plane")
                       else self.make_model((band_h, W)))
-        ctx = _BandCtx(plan.axis, bands)
-        specs = fcn_activation_specs(rows_axis=plan.axis)
+        ctx = _BandCtx(model_axis, bands)
+        specs = fcn_activation_specs(
+            batch_axis=batch_axis, rows_axis=model_axis
+        )
 
         def shard(params, x):
             out = band_model.apply(params, x, band_ctx=ctx)
             return out["score"], out["links"]
 
         sm = shard_map_compat(
-            shard, plan.mesh,
+            shard, mesh,
             in_specs=(P(), specs["image"]),
             out_specs=(specs["score"], specs["links"]),
         )
@@ -298,6 +347,55 @@ class EngineFactory:
             return self._label_tail(score, links, valid_q)
 
         return jax.jit(run)
+
+    def _band_height(self, hw, bands: int) -> int:
+        """Validated per-band height for splitting plane ``hw`` into
+        ``bands`` rows: the band must divide evenly through the whole
+        stride pyramid so every device's local rows stay integral at the
+        deepest scale (``H % (bands * deepest_stride) == 0``)."""
+        H, _ = hw
+        if H % bands:
+            raise ValueError(f"H={H} not divisible into {bands} bands")
+        band_h = H // bands
+        deepest = self.deepest_stride(hw)
+        if band_h % deepest:
+            raise ValueError(
+                f"band height {band_h} must be a multiple of the deepest "
+                f"cumulative stride {deepest} (H={H}, bands={bands})"
+            )
+        return band_h
+
+    def _compile_grid(self, hw, batch, plan: GridPlan) -> Callable:
+        """DataParallel x RowBand composed in one shard_map: batch over
+        ``data_axis``, rows over ``model_axis``, per-layer halo exchange
+        along ``model_axis`` only."""
+        sizes = mesh_axis_sizes(plan.mesh)
+        dn = sizes.get(plan.data_axis)
+        mn = sizes.get(plan.model_axis)
+        for ax, n in ((plan.data_axis, dn), (plan.model_axis, mn)):
+            if n is None:
+                raise ValueError(
+                    f"mesh {plan.mesh.axis_names} has no axis {ax!r}"
+                )
+        if plan.data_axis == plan.model_axis:
+            raise ValueError(
+                f"grid axes must differ, got {plan.data_axis!r} twice"
+            )
+        if batch % dn:
+            raise ValueError(
+                f"batch {batch} not divisible by {plan.data_axis}={dn}; "
+                f"round with plan_batch_multiple()"
+            )
+        bands = plan.bands or mn
+        if bands != mn:
+            raise ValueError(
+                f"bands={plan.bands} must equal mesh axis "
+                f"{plan.model_axis}={mn}"
+            )
+        return self._compile_banded(
+            plan.mesh, hw, bands, plan.model_axis,
+            batch_axis=plan.data_axis,
+        )
 
     # -- introspection ---------------------------------------------------------
     @property

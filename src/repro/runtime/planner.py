@@ -1,0 +1,238 @@
+"""Cost-model plan routing — heterogeneous buckets per plan (ROADMAP).
+
+The serving scheduler used to apply one fixed rule: over-tall images go
+to the configured ``tall_plan``, everything else to the service default.
+This module replaces that with a small analytic cost model so buckets of
+different shapes in ONE service route to different ExecutionPlans
+(runtime/executor.py): a FaSTExt-class small bucket stays on
+:class:`~repro.runtime.executor.SingleDevice` (sharding overhead would
+dominate), a batch-heavy bucket spreads over the mesh "data" axis, a
+tall EAST-class plane row-bands over "model", and a tall *and*
+batch-heavy bucket takes the composed :class:`GridPlan`.
+
+Per-plan step cost is estimated from three terms:
+
+  compute   per-device FLOPs (the plan's device grid divides the work)
+            over achievable FLOP/s,
+  halo      the bytes a row-banded device exchanges per step — per-layer
+            boundary rows (core.rowband.program_band_costs, which
+            mirrors FCNEngine._spatial_banded's halo rule) over ICI
+            bandwidth,
+  overhead  a fixed dispatch cost plus one collective-launch cost per
+            sharded mesh axis — the term that keeps small planes on a
+            single chip.
+
+plus a batch-split occupancy effect: data-parallel plans must pad the
+batch to a multiple of the axis size, so a batch of 1 on a 4-wide axis
+pays full single-device compute *and* the sharding overhead.
+
+The numbers are napkin-math (launch/mesh.py v5e-class constants by
+default), not a measured roofline: what matters for routing is the
+ORDER of the per-plan costs and where the crossovers sit, both of which
+are monotone in the right directions — e.g. a taller plane can only move
+further toward row-banded plans (compute grows with H, halo bytes do
+not), which test_planner.py pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from jax.sharding import Mesh
+
+from repro.launch.mesh import ICI_BW_PER_LINK, N_ICI_LINKS, PEAK_FLOPS_BF16
+from repro.runtime.executor import (
+    DataParallel,
+    ExecutionPlan,
+    GridPlan,
+    RowBand,
+    SingleDevice,
+)
+from repro.runtime.sharding import mesh_axis_sizes
+
+PLAN_KINDS = ("single_device", "data_parallel", "row_band", "grid")
+_BANDED = ("row_band", "grid")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanFeatures:
+    """Per-bucket cost-model inputs, one image at the bucket plane."""
+
+    flops: float                 # forward FLOPs per image
+    halo_bytes: float            # bytes one band exchanges per image
+    deepest_stride: int = 32     # cumulative stride of the deepest layer
+    halo_layers: int = 0         # spatial layers that halo-exchange
+                                 # (one ppermute pair each per step)
+
+
+def features_for_program(program, deepest_stride: int,
+                         *, dtype_bytes: int = 4) -> PlanFeatures:
+    """PlanFeatures from an assembled microcode program (shape walk,
+    no device work)."""
+    from repro.core.rowband import program_band_costs
+
+    c = program_band_costs(program, dtype_bytes=dtype_bytes)
+    return PlanFeatures(flops=c["flops"], halo_bytes=c["halo_bytes"],
+                        deepest_stride=deepest_stride,
+                        halo_layers=c["halo_layers"])
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Hardware/runtime constants of the step-cost estimate.  Defaults
+    are the v5e-class napkin numbers from launch/mesh.py with a 35%
+    achievable-FLOPs derate."""
+
+    peak_flops: float = 0.35 * PEAK_FLOPS_BF16
+    ici_bw: float = ICI_BW_PER_LINK * N_ICI_LINKS
+    dispatch_overhead_s: float = 50e-6      # per-step launch cost
+    collective_overhead_s: float = 20e-6    # extra per sharded mesh axis
+    halo_launch_s: float = 2e-6             # per halo-exchanging layer
+                                            # (ppermute pair launch)
+
+
+def padded_batch(batch: int, data_n: int) -> int:
+    """Batch after rounding up to the data-parallel divisibility rule."""
+    return -(-batch // data_n) * data_n
+
+
+def step_cost(features: PlanFeatures, kind: str, batch: int, *,
+              data_n: int = 1, model_n: int = 1,
+              params: CostParams = CostParams()) -> float:
+    """Estimated seconds for one engine step of ``batch`` images under
+    plan ``kind`` on a (data_n, model_n) mesh."""
+    if kind not in PLAN_KINDS:
+        raise ValueError(f"unknown plan kind {kind!r}")
+    dn = data_n if kind in ("data_parallel", "grid") else 1
+    mn = model_n if kind in _BANDED else 1
+    local_b = padded_batch(batch, dn) // dn   # occupancy: padding runs too
+    compute = features.flops * local_b / (mn * params.peak_flops)
+    # wire bytes plus one ppermute-pair launch per halo-exchanging layer
+    # — dozens of per-layer collectives per banded step, not one
+    halo = ((features.halo_bytes * local_b / params.ici_bw
+             + features.halo_layers * params.halo_launch_s)
+            if mn > 1 else 0.0)
+    overhead = (params.dispatch_overhead_s
+                + params.collective_overhead_s * ((dn > 1) + (mn > 1)))
+    return compute + halo + overhead
+
+
+def eligible_kinds(hw: Tuple[int, int], *, data_n: int, model_n: int,
+                   deepest_stride: int) -> List[str]:
+    """Plan kinds the mesh and bucket shape admit.  Row-banded kinds
+    require real model-axis capacity AND the band-height invariant
+    ``H % (bands * deepest_stride) == 0`` (runtime/executor.py enforces
+    the same rule at compile time)."""
+    kinds = ["single_device"]
+    if data_n > 1:
+        kinds.append("data_parallel")
+    if model_n > 1 and hw[0] % (model_n * deepest_stride) == 0:
+        kinds.append("row_band")
+        if data_n > 1:
+            kinds.append("grid")
+    return kinds
+
+
+def choose_kind(features: PlanFeatures, hw: Tuple[int, int], batch: int, *,
+                data_n: int, model_n: int,
+                params: CostParams = CostParams(),
+                force_banded: bool = False) -> str:
+    """Cheapest eligible plan kind; exact ties break toward the simpler
+    plan (PLAN_KINDS order).  ``force_banded`` restricts to row-banded
+    kinds when any is eligible — the over-tall/transposed routing rule
+    (launch/serve.py pads such heights to the band unit first)."""
+    kinds = eligible_kinds(hw, data_n=data_n, model_n=model_n,
+                           deepest_stride=features.deepest_stride)
+    if force_banded:
+        banded = [k for k in kinds if k in _BANDED]
+        kinds = banded or kinds
+    return min(
+        kinds,
+        key=lambda k: (step_cost(features, k, batch, data_n=data_n,
+                                 model_n=model_n, params=params),
+                       PLAN_KINDS.index(k)),
+    )
+
+
+class Planner:
+    """Routes (bucket_hw, batch) to an ExecutionPlan on one mesh.
+
+    ``features_fn(hw) -> PlanFeatures`` supplies the per-bucket cost
+    features (the service wires it to the EngineFactory's assembled
+    program — see launch/serve.py); results are memoized per bucket so
+    routing a request is dict-lookup cheap after first sight.  It may be
+    left None at construction (``Planner(mesh)``) and bound later with
+    :meth:`bind_features` — STDService does exactly that, so callers can
+    hand the service a bare mesh-shaped planner.
+    """
+
+    def __init__(self, mesh: Mesh,
+                 features_fn: Optional[
+                     Callable[[Tuple[int, int]], PlanFeatures]] = None, *,
+                 data_axis: str = "data", model_axis: str = "model",
+                 params: CostParams = CostParams()):
+        sizes = mesh_axis_sizes(mesh)
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        self.data_n = sizes.get(data_axis, 1)
+        self.model_n = sizes.get(model_axis, 1)
+        self.params = params
+        self._features_fn = features_fn
+        self._features: Dict[Tuple[int, int], PlanFeatures] = {}
+
+    def bind_features(
+        self, features_fn: Callable[[Tuple[int, int]], PlanFeatures],
+    ) -> "Planner":
+        """Late-bind the feature source (idempotent: an explicit
+        constructor-time features_fn wins)."""
+        if self._features_fn is None:
+            self._features_fn = features_fn
+        return self
+
+    def features(self, hw: Tuple[int, int]) -> PlanFeatures:
+        hw = tuple(hw)
+        f = self._features.get(hw)
+        if f is None:
+            if self._features_fn is None:
+                raise RuntimeError(
+                    "Planner has no features_fn; pass one at construction "
+                    "or call bind_features()"
+                )
+            f = self._features_fn(hw)
+            self._features[hw] = f
+        return f
+
+    def height_unit(self, deepest_stride: int) -> int:
+        """Heights routed to this planner's row-banded plans must be a
+        multiple of this (bands x deepest stride)."""
+        return max(self.model_n, 1) * deepest_stride
+
+    def costs(self, hw: Tuple[int, int], batch: int) -> Dict[str, float]:
+        """The per-kind cost table for one bucket (bench introspection)."""
+        f = self.features(hw)
+        return {
+            k: step_cost(f, k, batch, data_n=self.data_n,
+                         model_n=self.model_n, params=self.params)
+            for k in eligible_kinds(hw, data_n=self.data_n,
+                                    model_n=self.model_n,
+                                    deepest_stride=f.deepest_stride)
+        }
+
+    def choose(self, hw: Tuple[int, int], batch: int, *,
+               force_banded: bool = False) -> ExecutionPlan:
+        kind = choose_kind(self.features(hw), hw, batch,
+                           data_n=self.data_n, model_n=self.model_n,
+                           params=self.params, force_banded=force_banded)
+        return self.plan_for_kind(kind)
+
+    def plan_for_kind(self, kind: str) -> ExecutionPlan:
+        if kind == "single_device":
+            return SingleDevice()
+        if kind == "data_parallel":
+            return DataParallel(self.mesh, self.data_axis)
+        if kind == "row_band":
+            return RowBand(self.mesh, axis=self.model_axis)
+        if kind == "grid":
+            return GridPlan(self.mesh, self.data_axis, self.model_axis)
+        raise ValueError(f"unknown plan kind {kind!r}")

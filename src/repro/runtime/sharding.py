@@ -12,8 +12,10 @@ this module resolves *activation* and *input* shardings:
     sharded over "model";
   * FCN serving activations (NHWC image planes and the score/link/label
     maps derived from them): batch over "data" for data-parallel plans,
-    rows over "model" for row-band plans — fcn_activation_specs is
-    consumed by runtime.executor's ExecutionPlans; fcn_batch_axis is the
+    rows over "model" for row-band plans, or BOTH AT ONCE for the 2-D
+    GridPlan (batch_axis="data" + rows_axis="model" compose into one
+    P("data", "model", ...) layout) — fcn_activation_specs is consumed
+    by runtime.executor's ExecutionPlans; fcn_batch_axis is the
     divisibility rule for callers picking a batch axis themselves.
 """
 from __future__ import annotations

@@ -55,8 +55,13 @@ class TestPlanKeyedLRU:
         dp = fac.plan_fn((64, 64), 2, DataParallel(unit_mesh, "data"))
         rb = fac.plan_fn((64, 64), 2, RowBand(unit_mesh, axis="model"))
         assert dp is not single and rb is not single and dp is not rb
-        assert len(fac) == 5
-        assert fac.engines.hits == 1 and fac.engines.misses == 5
+        from repro.runtime.executor import GridPlan
+
+        gr = fac.plan_fn((64, 64), 2, GridPlan(unit_mesh))
+        assert gr not in (single, dp, rb)
+        assert fac.plan_fn((64, 64), 2, GridPlan(unit_mesh)) is gr  # hit
+        assert len(fac) == 6
+        assert fac.engines.hits == 2 and fac.engines.misses == 6
 
     def test_eviction_at_capacity(self, unit_mesh):
         from repro.runtime.executor import DataParallel, SingleDevice
@@ -101,6 +106,20 @@ class TestPlanBatchMultiple:
         from repro.runtime.executor import DataParallel, plan_batch_multiple
 
         assert plan_batch_multiple(DataParallel(unit_mesh, "data")) == 1
+
+    def test_grid_is_data_axis_size(self, unit_mesh):
+        from repro.runtime.executor import GridPlan, plan_batch_multiple
+
+        assert plan_batch_multiple(GridPlan(unit_mesh)) == 1
+
+    def test_band_height_unit_covers_all_plans(self, unit_mesh):
+        from repro.runtime.executor import (GridPlan, RowBand, SingleDevice,
+                                            band_height_unit)
+
+        assert band_height_unit(SingleDevice(), 32) == 32
+        assert band_height_unit(RowBand(unit_mesh, "model", bands=8),
+                                32) == 256
+        assert band_height_unit(GridPlan(unit_mesh, bands=4), 32) == 128
 
 
 class TestHaloExchange:
@@ -148,6 +167,19 @@ class TestFCNActivationSpecs:
         assert rb["image"] == P(None, "model", None, None)
         assert rb["score"] == P(None, "model", None)
 
+    def test_grid_composes_both_axes(self):
+        """The 2-D specs the GridPlan shard_map runs under: batch over
+        "data" AND rows over "model" in one layout."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.sharding import fcn_activation_specs
+
+        g = fcn_activation_specs(batch_axis="data", rows_axis="model")
+        assert g["image"] == P("data", "model", None, None)
+        assert g["score"] == P("data", "model", None)
+        assert g["links"] == P("data", "model", None, None)
+        assert g["labels"] == P("data", "model", None)
+
     def test_fcn_batch_axis_divisibility(self, unit_mesh):
         from repro.runtime.sharding import fcn_batch_axis
 
@@ -173,8 +205,11 @@ class TestUnitMeshPlanParity:
         x = jnp.asarray(rng.random((2, 64, 64, 3)).astype(np.float32))
         vq = jnp.asarray(np.array([[16, 16], [12, 14]], np.int32))
         want = np.asarray(fac.plan_fn(hw, 2, SingleDevice())(params, x, vq))
+        from repro.runtime.executor import GridPlan
+
         for plan in (DataParallel(unit_mesh, "data"),
-                     RowBand(unit_mesh, axis="model")):
+                     RowBand(unit_mesh, axis="model"),
+                     GridPlan(unit_mesh)):
             got = np.asarray(fac.plan_fn(hw, 2, plan)(params, x, vq))
             np.testing.assert_array_equal(got, want)
 
@@ -193,6 +228,23 @@ class TestUnitMeshPlanParity:
         fac = make_factory()
         with pytest.raises(ValueError, match="no axis"):
             fac.plan_fn((64, 64), 2, DataParallel(unit_mesh, "nope"))
+
+    def test_grid_rejects_missing_or_equal_axes(self, unit_mesh):
+        from repro.runtime.executor import GridPlan
+
+        fac = make_factory()
+        with pytest.raises(ValueError, match="no axis"):
+            fac.plan_fn((64, 64), 2, GridPlan(unit_mesh, data_axis="nope"))
+        with pytest.raises(ValueError, match="axes must differ"):
+            fac.plan_fn((64, 64), 2,
+                        GridPlan(unit_mesh, data_axis="model"))
+
+    def test_grid_rejects_misaligned_bands(self, unit_mesh):
+        from repro.runtime.executor import GridPlan
+
+        fac = make_factory()
+        with pytest.raises(ValueError, match="bands"):
+            fac.plan_fn((64, 64), 1, GridPlan(unit_mesh, bands=2))
 
 
 class TestOversizeBuckets:

@@ -1,0 +1,266 @@
+"""Cost-model plan router tests (runtime/planner.py) — fast tier.
+
+The routing properties pinned here are what serving correctness and the
+ISSUE acceptance rely on, independent of the napkin constants:
+
+  * monotonicity — a taller image never moves from a row-banded plan
+    back to SingleDevice (compute grows with H, halo bytes do not);
+  * the band-height invariant ``H % (bands * deepest_stride) == 0``
+    gates RowBand/GridPlan eligibility (the executor enforces the same
+    rule at compile time);
+  * over-tall (and transposed over-wide, which becomes over-tall before
+    routing) shapes land on a row-banded plan whenever the mesh has
+    model-axis capacity (``force_banded``);
+  * batch-split occupancy — padding a batch of 1 across a data axis
+    never looks cheaper than a single device.
+
+Feature extraction (core.rowband.program_band_costs) is checked against
+the real assembled PixelLink program.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.planner import (
+    CostParams,
+    PlanFeatures,
+    Planner,
+    choose_kind,
+    eligible_kinds,
+    features_for_program,
+    padded_batch,
+    step_cost,
+)
+
+# crossover-friendly constants: tiny-model FLOPs still register against
+# the overheads, so routing decisions move within the swept ranges
+TEST_PARAMS = CostParams(
+    peak_flops=5e9, ici_bw=1e9,
+    dispatch_overhead_s=50e-6, collective_overhead_s=20e-6,
+)
+
+
+def tall_features(h: int, w: int = 64) -> PlanFeatures:
+    """Synthetic features of an FCN plane: compute scales with the
+    plane, halo bytes scale with W only (boundary rows)."""
+    return PlanFeatures(flops=2e5 * h * w / 64.0, halo_bytes=3e4 * w / 64.0,
+                        deepest_stride=32)
+
+
+class TestStepCost:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown plan kind"):
+            step_cost(tall_features(64), "mystery", 1)
+
+    def test_occupancy_batch_one_never_prefers_data_parallel(self):
+        """A batch of 1 on a 4-wide data axis pads to 4: full
+        single-device compute per device plus sharding overhead."""
+        f = tall_features(512)
+        single = step_cost(f, "single_device", 1, data_n=4, model_n=1,
+                           params=TEST_PARAMS)
+        dp = step_cost(f, "data_parallel", 1, data_n=4, model_n=1,
+                       params=TEST_PARAMS)
+        assert dp > single
+
+    def test_data_parallel_wins_at_full_batch(self):
+        f = tall_features(512)
+        single = step_cost(f, "single_device", 8, data_n=4, model_n=1,
+                           params=TEST_PARAMS)
+        dp = step_cost(f, "data_parallel", 8, data_n=4, model_n=1,
+                       params=TEST_PARAMS)
+        assert dp < single
+
+    def test_grid_splits_both_axes(self):
+        """At full batch on a tall plane the grid cost sits below both
+        single-axis plans (compute divided by data_n x model_n)."""
+        f = tall_features(1024)
+        kw = dict(data_n=2, model_n=4, params=TEST_PARAMS)
+        grid = step_cost(f, "grid", 8, **kw)
+        assert grid < step_cost(f, "row_band", 8, **kw)
+        assert grid < step_cost(f, "data_parallel", 8, **kw)
+        assert grid < step_cost(f, "single_device", 8, **kw)
+
+    def test_halo_layer_launches_penalize_banded_plans_only(self):
+        """Every halo-exchanging layer is a ppermute pair per step; the
+        launch cost lands on row-banded kinds and leaves single-device /
+        data-parallel costs untouched."""
+        base = tall_features(512)
+        many = PlanFeatures(flops=base.flops, halo_bytes=base.halo_bytes,
+                            deepest_stride=32, halo_layers=30)
+        kw = dict(data_n=2, model_n=4, params=TEST_PARAMS)
+        for kind in ("single_device", "data_parallel"):
+            assert step_cost(many, kind, 1, **kw) == \
+                step_cost(base, kind, 1, **kw)
+        for kind in ("row_band", "grid"):
+            assert step_cost(many, kind, 1, **kw) == pytest.approx(
+                step_cost(base, kind, 1, **kw)
+                + 30 * TEST_PARAMS.halo_launch_s)
+
+    def test_padded_batch(self):
+        assert padded_batch(1, 4) == 4
+        assert padded_batch(4, 4) == 4
+        assert padded_batch(5, 4) == 8
+        assert padded_batch(3, 1) == 3
+
+
+class TestEligibility:
+    def test_band_height_invariant_gates_banded_kinds(self):
+        kw = dict(data_n=2, model_n=4, deepest_stride=32)
+        # 4 bands x stride 32 -> H must be a multiple of 128
+        assert "row_band" not in eligible_kinds((64, 64), **kw)
+        assert "grid" not in eligible_kinds((192, 64), **kw)
+        assert set(eligible_kinds((256, 64), **kw)) == {
+            "single_device", "data_parallel", "row_band", "grid"}
+
+    def test_unit_mesh_is_single_device_only(self):
+        assert eligible_kinds((256, 64), data_n=1, model_n=1,
+                              deepest_stride=32) == ["single_device"]
+
+    def test_no_data_axis_no_batch_kinds(self):
+        kinds = eligible_kinds((256, 64), data_n=1, model_n=4,
+                               deepest_stride=32)
+        assert kinds == ["single_device", "row_band"]
+
+
+class TestRouting:
+    def test_taller_never_moves_back_to_single_device(self):
+        """Monotonicity: sweeping H upward, once routing leaves
+        SingleDevice for a row-banded plan it never returns."""
+        kw = dict(data_n=2, model_n=4, params=TEST_PARAMS)
+        banded_seen = False
+        kinds = []
+        for h in range(128, 4097, 128):
+            k = choose_kind(tall_features(h), (h, 64), 1, **kw)
+            kinds.append(k)
+            if k in ("row_band", "grid"):
+                banded_seen = True
+            elif banded_seen:
+                raise AssertionError(
+                    f"H={h} moved back to {k} after banding: {kinds}")
+        assert banded_seen, f"crossover never happened: {kinds}"
+
+    def test_small_plane_stays_single_device(self):
+        k = choose_kind(tall_features(64), (64, 64), 1, data_n=2,
+                        model_n=4, params=TEST_PARAMS)
+        assert k == "single_device"
+
+    def test_force_banded_lands_on_row_banded_plan(self):
+        """The over-tall / transposed-over-wide rule: even where a small
+        plan is cheaper, oversize shapes must ride a banded plan."""
+        f = tall_features(256)
+        k = choose_kind(f, (256, 64), 1, data_n=2, model_n=4,
+                        params=TEST_PARAMS, force_banded=True)
+        assert k in ("row_band", "grid")
+        # with batch depth the grid becomes the banded winner
+        k8 = choose_kind(tall_features(2048), (2048, 64), 8, data_n=2,
+                         model_n=4, params=TEST_PARAMS, force_banded=True)
+        assert k8 == "grid"
+
+    def test_force_banded_falls_back_without_capacity(self):
+        k = choose_kind(tall_features(256), (256, 64), 1, data_n=1,
+                        model_n=1, params=TEST_PARAMS, force_banded=True)
+        assert k == "single_device"
+
+    def test_batch_moves_routing_toward_data_parallel(self):
+        f = tall_features(320)
+        kw = dict(data_n=4, model_n=1, params=TEST_PARAMS)
+        assert choose_kind(f, (320, 64), 1, **kw) == "single_device"
+        assert choose_kind(f, (320, 64), 8, **kw) == "data_parallel"
+
+
+class TestProgramFeatures:
+    @pytest.fixture(scope="class")
+    def model_at(self):
+        from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
+
+        def make(hw):
+            return PixelLinkModel(STDConfig(
+                backbone="vgg16", width=0.125, image_size=hw,
+                merge_ch=(16, 16, 8), mode="optimized",
+                storage_fp16=False))
+
+        return make
+
+    def test_band_costs_from_real_program(self, model_at):
+        from repro.core.rowband import program_band_costs
+
+        c = program_band_costs(model_at((64, 64)).program)
+        assert c["flops"] > 0 and c["halo_bytes"] > 0
+        assert c["halo_layers"] > 0
+
+    def test_flops_scale_with_height_halo_does_not(self, model_at):
+        from repro.core.rowband import program_band_costs
+
+        c1 = program_band_costs(model_at((64, 64)).program)
+        c2 = program_band_costs(model_at((128, 64)).program)
+        assert c2["flops"] == pytest.approx(2 * c1["flops"], rel=0.05)
+        # halo rows are boundary rows: W-dependent, H-independent
+        assert c2["halo_bytes"] == c1["halo_bytes"]
+
+    def test_features_for_program(self, model_at):
+        f = features_for_program(model_at((64, 64)).program, 32)
+        assert isinstance(f, PlanFeatures)
+        assert f.deepest_stride == 32 and f.flops > 0
+
+
+class TestPlanner:
+    @pytest.fixture()
+    def unit_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+
+        return make_host_mesh((1, 1), ("data", "model"))
+
+    def test_features_memoized(self, unit_mesh):
+        calls = []
+
+        def feats(hw):
+            calls.append(hw)
+            return tall_features(hw[0], hw[1])
+
+        p = Planner(unit_mesh, feats)
+        p.choose((64, 64), 1)
+        p.choose((64, 64), 4)
+        assert calls == [(64, 64)]
+
+    def test_unbound_features_raise(self, unit_mesh):
+        with pytest.raises(RuntimeError, match="features_fn"):
+            Planner(unit_mesh).choose((64, 64), 1)
+
+    def test_bind_features_is_idempotent(self, unit_mesh):
+        first = lambda hw: tall_features(hw[0], hw[1])
+        p = Planner(unit_mesh, first)
+        p.bind_features(lambda hw: (_ for _ in ()).throw(AssertionError))
+        assert p._features_fn is first
+
+    def test_plan_for_kind_mapping(self, unit_mesh):
+        from repro.runtime.executor import (DataParallel, GridPlan,
+                                            RowBand, SingleDevice)
+
+        p = Planner(unit_mesh)
+        assert isinstance(p.plan_for_kind("single_device"), SingleDevice)
+        assert isinstance(p.plan_for_kind("data_parallel"), DataParallel)
+        assert isinstance(p.plan_for_kind("row_band"), RowBand)
+        assert isinstance(p.plan_for_kind("grid"), GridPlan)
+        with pytest.raises(ValueError, match="unknown plan kind"):
+            p.plan_for_kind("pod")
+
+    def test_height_unit(self, unit_mesh):
+        assert Planner(unit_mesh).height_unit(32) == 32
+
+    def test_costs_table_only_eligible_kinds(self, unit_mesh):
+        p = Planner(unit_mesh, lambda hw: tall_features(hw[0], hw[1]))
+        assert set(p.costs((256, 64), 4)) == {"single_device"}
+
+    def test_service_with_unit_planner_serves_over_tall(self, unit_mesh):
+        """End to end on one device: a planner-routed service clamps and
+        serves an over-tall image exactly like the base service (no
+        banded capacity on a unit mesh -> single-device fallback)."""
+        from repro.launch.serve import STDService
+
+        svc = STDService(width=0.125, buckets=(64,), max_batch=2,
+                         planner=Planner(unit_mesh))
+        img = np.random.default_rng(0).random(
+            (100, 48, 3)).astype(np.float32)
+        boxes = svc(img)
+        assert svc.stats["plan_choices"][(128, 64)] == "single_device"
+        ref = STDService(width=0.125, buckets=(64,), max_batch=2)
+        assert [b["box"] for b in boxes] == [b["box"] for b in ref(img)]

@@ -164,6 +164,132 @@ class TestMicroBatcher:
         assert results == {i: i for i in range(16)}
 
 
+class TestAdmissionStress:
+    """Admission control under CONCURRENT producers: "reject" sheds
+    exactly the overflow (every attempt is either admitted-and-served or
+    counted shed), "block" never lets the pending queue exceed
+    ``max_pending``, and shutdown strands no future."""
+
+    N_PRODUCERS = 8
+    PER_PRODUCER = 25
+
+    def _hammer(self, mb, on_full):
+        """Submit from N_PRODUCERS threads; returns (futures, sheds)."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        def producer(i):
+            futs, shed = [], 0
+            for j in range(self.PER_PRODUCER):
+                try:
+                    futs.append(mb.submit(("b", i % 2), (i, j)))
+                except on_full:
+                    shed += 1
+            return futs, shed
+
+        with ThreadPoolExecutor(self.N_PRODUCERS) as ex:
+            out = list(ex.map(producer, range(self.N_PRODUCERS)))
+        return [f for futs, _ in out for f in futs], sum(s for _, s in out)
+
+    def test_reject_sheds_exactly_the_overflow(self):
+        from repro.launch.batching import QueueFull
+
+        gate = threading.Event()
+
+        def infer(key, payloads):
+            gate.wait(5)                 # hold the drain so the queue fills
+            return payloads
+
+        total = self.N_PRODUCERS * self.PER_PRODUCER
+        mb = MicroBatcher(infer, max_batch=4, max_wait_ms=1.0,
+                          max_pending=8, admission="reject").start()
+        try:
+            futs, shed = self._hammer(mb, QueueFull)
+            gate.set()
+        finally:
+            mb.stop()
+        # exactness: every attempt is accounted once — admitted requests
+        # all resolve, sheds all hit the counter, nothing double-counted
+        assert len(futs) + shed == total
+        assert shed > 0                  # the gate guaranteed overflow
+        assert mb.stats["submitted"] == len(futs)
+        assert mb.stats["rejected"] == shed
+        assert all(f.done() for f in futs)
+        got = {f.result(timeout=5) for f in futs}
+        assert len(got) == len(futs)     # no result lost or duplicated
+
+    def test_block_never_exceeds_max_pending(self):
+        max_pending = 6
+        peak = []
+        stop_sampling = threading.Event()
+
+        def infer(key, payloads):
+            time.sleep(0.002)            # keep producers ahead of drain
+            return payloads
+
+        def watcher(mb):
+            while not stop_sampling.is_set():
+                peak.append(mb._n_pending)
+                time.sleep(0.0005)
+
+        mb = MicroBatcher(infer, max_batch=4, max_wait_ms=1.0,
+                          max_pending=max_pending,
+                          admission="block").start()
+        w = threading.Thread(target=watcher, args=(mb,))
+        w.start()
+        try:
+            futs, shed = self._hammer(mb, ())
+        finally:
+            mb.stop()
+            stop_sampling.set()
+            w.join(timeout=5)
+        assert shed == 0                 # block policy never raises
+        assert len(futs) == self.N_PRODUCERS * self.PER_PRODUCER
+        assert all(f.done() for f in futs)
+        assert peak and max(peak) <= max_pending
+        assert mb.stats["rejected"] == 0
+
+    def test_shutdown_strands_no_future(self):
+        """stop() racing concurrent producers: every future handed out
+        resolves (drain flush), late submitters get a clean error, and
+        nothing hangs."""
+        accepted = []
+        errors = []
+        lock = threading.Lock()
+
+        def infer(key, payloads):
+            time.sleep(0.002)
+            return payloads
+
+        mb = MicroBatcher(infer, max_batch=4, max_wait_ms=1.0,
+                          max_pending=8, admission="block").start()
+
+        def producer(i):
+            for j in range(self.PER_PRODUCER):
+                try:
+                    f = mb.submit(("b", i % 2), (i, j))
+                    with lock:
+                        accepted.append(f)
+                except RuntimeError:
+                    with lock:
+                        errors.append((i, j))
+                    return               # scheduler is shutting down
+
+        ts = [threading.Thread(target=producer, args=(i,))
+              for i in range(self.N_PRODUCERS)]
+        for t in ts:
+            t.start()
+        time.sleep(0.05)                 # let the queue get busy
+        mb.stop()                        # drains everything admitted
+        for t in ts:
+            t.join(timeout=10)
+        assert not any(t.is_alive() for t in ts)
+        assert accepted                  # the race admitted some work
+        assert all(f.done() for f in accepted), "stranded futures"
+        for f in accepted:
+            f.result(timeout=5)          # none poisoned by shutdown
+        assert mb.stats["submitted"] == len(accepted)
+
+
 class TestHostPipeline:
     def test_ordered_results(self):
         from repro.runtime.pipeline import HostPipeline
