@@ -9,7 +9,11 @@ rates (``--rates``, requests/s): requests are submitted on a seeded
 exponential-interarrival clock regardless of completions, the way real
 traffic hits a service.  Reports offered vs achieved TPS, p50/p99
 latency, and admission-control sheds per rate — the knee where achieved
-TPS flattens and latency diverges is the service's capacity.
+TPS flattens and latency diverges is the service's capacity.  Each rate
+sweeps the async pipeline depth (``--inflight``, always including the
+fully synchronous ``0`` baseline) and reports the overlap gain:
+achieved TPS at depth N over achieved TPS on the serialized path at the
+same offered load.
 
 Each mode is warmed on the same stream first (compiles are a one-time
 deployment cost in the paper's serving story; the steady-state pass is
@@ -27,7 +31,7 @@ actually ran.
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
-          --open-loop --rates 8 32 128
+          --open-loop --rates 8 32 128 --inflight 1 2 4
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 16 \
           --plan grid --mesh-shape 2 4 --open-loop --rates 8
@@ -152,7 +156,8 @@ def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
                   pre_workers: int = 4, verbose: bool = True,
-                  plan_kind: str = "single", mesh_shape=None):
+                  plan_kind: str = "single", mesh_shape=None,
+                  inflight: int = 1):
     """Returns {mode: {tps, p50_ms, p99_ms}} plus parity/batching info."""
     from repro.data.images import RequestStream
     from repro.launch.serve import STDService
@@ -169,7 +174,7 @@ def bench_serving(requests: int = 32, width: float = 0.25,
     svc = STDService(width=width, buckets=tuple(buckets),
                      max_batch=max_batch, max_wait_ms=max_wait_ms,
                      engine_cache_capacity=0,      # hold every warm shape
-                     **extra_kw)
+                     inflight=inflight, **extra_kw)
     _check_band_units(svc, planner, plan_kind, buckets)
 
     results = {}
@@ -236,11 +241,14 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
                     max_batch: int = 8, max_wait_ms: float = 8.0,
                     seed: int = 0, max_pending: int = 0,
                     admission: str = "block", verbose: bool = True,
-                    plan_kind: str = "single", mesh_shape=None):
+                    plan_kind: str = "single", mesh_shape=None,
+                    inflight_values=(2,)):
     """Open-loop (Poisson arrival) serving: offered load vs achieved TPS
-    and p50/p99 latency per offered rate.  Returns {rate: {...}}."""
+    and p50/p99 latency, per offered rate and per async pipeline depth
+    (``inflight_values``; the synchronous depth 0 is always swept as
+    the overlap-gain baseline).  Returns {rate: {inflight: {...}}}."""
     from repro.data.images import RequestStream
-    from repro.launch.batching import QueueFull, wait_for_samples
+    from repro.launch.batching import LatencyRecorder, QueueFull
     from repro.launch.serve import STDService
 
     extra_kw, planner, buckets = _plan_setup(
@@ -272,48 +280,69 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
     svc.max_pending = max_pending
     svc.admission = admission
 
+    # depth 0 (fully serialized dispatch->completion) is the overlap
+    # baseline every async depth is reported against
+    depths = sorted({0, *(int(n) for n in inflight_values)})
+
     results = {}
     for rate in rates:
-        rng = np.random.default_rng(seed)
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
-        svc.start_batched()
-        lat, futs, shed = [], [], 0
-        t0 = time.perf_counter()
-        try:
-            for img, due in zip(images, arrivals):
-                now = time.perf_counter() - t0
-                if due > now:
-                    time.sleep(due - now)
-                t = time.perf_counter()
-                try:
-                    fut = svc.submit(img)
-                except QueueFull:
-                    shed += 1
-                    continue
-                fut.add_done_callback(
-                    lambda f, t=t: lat.append(time.perf_counter() - t)
-                )
-                futs.append(fut)
-            for f in futs:
-                f.result(timeout=600)
-            # callbacks lag result(): let all latency samples land
-            wait_for_samples(lat, len(futs))
-        finally:
-            svc.stop_batched()
-        wall = time.perf_counter() - t0
-        results[rate] = {
-            "offered_tps": rate,
-            "achieved_tps": len(futs) / wall,
-            "completed": len(futs),
-            "shed": shed,
-            "p50_ms": _pctl(lat, 50), "p99_ms": _pctl(lat, 99),
-        }
-        if verbose:
-            r = results[rate]
-            print(f"serve_open_loop,offered {rate:.1f} rps,"
-                  f"achieved {r['achieved_tps']:.2f} TPS,"
-                  f"p50 {r['p50_ms']:.1f} ms,p99 {r['p99_ms']:.1f} ms,"
-                  f"shed {shed}")
+        per_depth = {}
+        for n in depths:
+            rng = np.random.default_rng(seed)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+            svc.inflight = n             # next start_batched picks it up
+            svc.start_batched()
+            rec = LatencyRecorder()
+            futs, shed = [], 0
+            t0 = time.perf_counter()
+            try:
+                for img, due in zip(images, arrivals):
+                    now = time.perf_counter() - t0
+                    if due > now:
+                        time.sleep(due - now)
+                    t = time.perf_counter()
+                    try:
+                        fut = svc.submit(img)
+                    except QueueFull:
+                        shed += 1
+                        continue
+                    futs.append(rec.track(fut, t0=t))
+                for f in futs:
+                    f.result(timeout=600)
+                # event-driven: every sample has landed once this returns
+                rec.wait()
+            finally:
+                svc.stop_batched()
+            wall = time.perf_counter() - t0
+            mb = svc.stats["batching"]
+            per_depth[n] = {
+                "offered_tps": rate,
+                "inflight": n,
+                "achieved_tps": len(futs) / wall,
+                "completed": len(futs),
+                "shed": shed,
+                "p50_ms": _pctl(rec.samples, 50),
+                "p99_ms": _pctl(rec.samples, 99),
+                "inflight_peak": mb["inflight_peak"],
+                "stage_occupancy": mb["stage_occupancy"],
+            }
+        base_tps = per_depth[0]["achieved_tps"]
+        for n in depths:
+            r = per_depth[n]
+            r["overlap_gain"] = (r["achieved_tps"] / base_tps
+                                 if base_tps > 0 else 0.0)
+            if verbose:
+                occ = r["stage_occupancy"]
+                print(f"serve_open_loop,offered {rate:.1f} rps,"
+                      f"inflight {n},"
+                      f"achieved {r['achieved_tps']:.2f} TPS,"
+                      f"p50 {r['p50_ms']:.1f} ms,"
+                      f"p99 {r['p99_ms']:.1f} ms,"
+                      f"shed {r['shed']},"
+                      f"gain x{r['overlap_gain']:.2f},"
+                      f"occ d{occ.get('dispatch', 0.0):.2f}"
+                      f"/c{occ.get('complete', 0.0):.2f}")
+        results[rate] = per_depth
     results["plans"] = report_plan_choices(svc, planner, max_batch, verbose)
     return results
 
@@ -333,6 +362,11 @@ def main(argv=None):
                     help="offered open-loop rates, requests/s")
     ap.add_argument("--max-pending", type=int, default=0,
                     help="admission-control queue bound (0 = unbounded)")
+    ap.add_argument("--inflight", type=int, nargs="+", default=[2],
+                    help="async pipeline depths to sweep in open-loop "
+                         "mode (0 = fully synchronous dispatch, always "
+                         "included as the overlap-gain baseline); the "
+                         "closed-loop pass runs at max(inflight)")
     ap.add_argument("--admission", default="block",
                     choices=["block", "reject"])
     ap.add_argument("--plan", default="single",
@@ -347,7 +381,8 @@ def main(argv=None):
     out = bench_serving(args.requests, args.width, tuple(args.buckets),
                         args.max_batch, args.max_wait_ms, args.seed,
                         args.pre_workers, plan_kind=args.plan,
-                        mesh_shape=args.mesh_shape)
+                        mesh_shape=args.mesh_shape,
+                        inflight=max(args.inflight))
     if args.plan == "auto":
         # routing is batch-dependent, so sequential (batch 1) and
         # micro-batched modes may legitimately run DIFFERENT plans for
@@ -366,6 +401,7 @@ def main(argv=None):
             tuple(args.buckets), args.max_batch, args.max_wait_ms,
             args.seed, args.max_pending, args.admission,
             plan_kind=args.plan, mesh_shape=args.mesh_shape,
+            inflight_values=tuple(args.inflight),
         )
     return out
 

@@ -22,12 +22,21 @@ echo "== tier-2: GridPlan parity + cost-model planner on an 8-device (2x4) host 
 python -m pytest -q -m "slow" tests/test_gridplan.py
 python -m pytest -q tests/test_planner.py
 
+echo "== tier-2: async pipelined dispatch parity + in-flight stress on the 8-device mesh =="
+# Async-vs-sync box parity (GridPlan, 0.5-threshold guard) and the
+# bounded in-flight stress run; the subprocess sets the 8-device
+# (2x4 data x model) host platform itself.  The fast-tier async tests
+# (dispatch/completion semantics, fake-clock harness, stats hammer)
+# already ran in the tiers above.
+python -m pytest -q -m "slow" tests/test_async_serving.py
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override
 # XLA_FLAGS themselves before importing jax, so they are unaffected.
 # exit 5 = nothing collected (e.g. a path argument with no slow tests)
-# (test_gridplan.py already ran in the grid stage above)
+# (test_gridplan.py / test_async_serving.py already ran in their stages)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-python -m pytest -q -m "slow" --ignore=tests/test_gridplan.py "$@" \
+python -m pytest -q -m "slow" --ignore=tests/test_gridplan.py \
+  --ignore=tests/test_async_serving.py "$@" \
   || { rc=$?; [ "$rc" -eq 5 ] || exit "$rc"; }

@@ -11,14 +11,29 @@ that makes that possible behind an async `submit() -> Future` API:
   * admission control: ``max_pending`` bounds the total queued depth so
     overload sheds ("reject" -> :class:`QueueFull`) or backpressures
     ("block") instead of growing the queue without bound,
-  * one infer thread serializes device work (batches from different
-    buckets interleave, never overlap), and a small post pool scatters
-    per-item results back to futures — so host preprocess (caller
-    threads), device inference, and host postprocess overlap exactly
-    like the paper's C4 module-level pipeline.
+  * the device path is a two-stage pipeline (the paper's C4
+    module-level multithreading applied to the engine itself): the
+    DISPATCH stage submits a batch's computation and — when the engine
+    is asynchronous, i.e. ``infer_fn`` returns un-materialized device
+    arrays the way JAX async dispatch does — immediately moves on to
+    the next bucket's batch, while the COMPLETION stage blocks on the
+    pending result (``finalize_fn``) and scatters per-item outputs to a
+    small post pool.  A bounded queue of depth ``inflight`` sits
+    between the stages, so H2D/compute/D2H of different buckets overlap
+    without unbounded device-memory growth; ``inflight=0`` collapses
+    the two stages back into one thread (the fully synchronous path).
 
-The scheduler is model-agnostic: ``infer_fn(key, payloads) -> outputs``
-runs one batch, ``post_fn(payload, output) -> result`` finishes one item.
+Time is read through an injectable ``clock`` (default
+``time.perf_counter``): flush deadlines, queued/latency stats all use
+it, and with a non-real clock the scheduler waits event-driven (a
+:class:`FakeClock` notifies :meth:`MicroBatcher.wake` on every advance)
+instead of on real timeouts — so timeout-flush tests run without real
+sleeps.
+
+The scheduler is model-agnostic: ``infer_fn(key, payloads) -> raw``
+runs one batch (returning either final outputs or a pending device
+handle), ``finalize_fn(key, raw) -> outputs`` materializes it, and
+``post_fn(payload, output) -> result`` finishes one item.
 """
 from __future__ import annotations
 
@@ -36,17 +51,81 @@ class QueueFull(RuntimeError):
     ``max_pending`` and the admission policy is "reject"."""
 
 
-def wait_for_samples(samples, n: int, timeout_s: float = 5.0) -> None:
-    """Block until ``samples`` holds ``n`` entries (or timeout).
+class LatencyRecorder:
+    """Event-driven per-request latency samples (replaces the old
+    ``wait_for_samples`` sleep-polling helper).
 
-    Future.set_result wakes result() waiters *before* running
-    done-callbacks, so latency lists appended from callbacks can lag the
-    final result() return — tail percentiles computed immediately would
-    see a truncated sample set.  Callers collect results, then wait here
-    before reading the samples."""
-    deadline = time.perf_counter() + timeout_s
-    while len(samples) < n and time.perf_counter() < deadline:
-        time.sleep(0.001)
+    ``Future.set_result`` wakes ``result()`` waiters *before* running
+    done-callbacks, so a latency list appended from callbacks can lag
+    the final ``result()`` return.  ``track(fut)`` registers a callback
+    that appends the sample and releases a semaphore; ``wait()``
+    acquires once per tracked future, so when it returns every sample
+    has landed — no sleep loop, no truncated tail percentiles."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.samples: List[float] = []
+        self._clock = clock
+        self._sem = threading.Semaphore(0)
+        self._lock = threading.Lock()
+        self._tracked = 0
+
+    def track(self, fut: Future, t0: Optional[float] = None) -> Future:
+        """Register one future; latency is measured from ``t0`` (or from
+        now) to the moment the future resolves."""
+        t = self._clock() if t0 is None else t0
+        with self._lock:
+            self._tracked += 1
+        fut.add_done_callback(
+            lambda f, t=t: (self.samples.append(self._clock() - t),
+                            self._sem.release())
+        )
+        return fut
+
+    def wait(self, timeout_s: float = 60.0) -> List[float]:
+        """Block until every tracked future's sample has landed."""
+        deadline = time.monotonic() + timeout_s
+        with self._lock:
+            n, self._tracked = self._tracked, 0
+        for _ in range(n):
+            left = deadline - time.monotonic()
+            if left <= 0 or not self._sem.acquire(timeout=left):
+                raise TimeoutError(
+                    f"latency samples missing after {timeout_s}s"
+                )
+        return self.samples
+
+
+class FakeClock:
+    """Deterministic manual clock for scheduler tests.
+
+    Calling the instance reads the current fake time; :meth:`advance`
+    moves it forward and notifies every subscriber — a
+    :class:`MicroBatcher` built with ``clock=FakeClock()`` subscribes
+    its :meth:`~MicroBatcher.wake`, so timeout flushes fire exactly when
+    the test advances time, with no real sleeps anywhere."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = t0
+        self._lock = threading.Lock()
+        self._subs: List[Callable[[], None]] = []
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def subscribe(self, fn: Callable[[], None]) -> None:
+        with self._lock:
+            self._subs.append(fn)
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("clocks only move forward")
+        with self._lock:
+            self._t += dt
+            t, subs = self._t, list(self._subs)
+        for fn in subs:
+            fn()
+        return t
 
 
 def round_batch(n: int, max_batch: int, mode: str = "pow2") -> int:
@@ -110,37 +189,70 @@ class MicroBatcher:
 
     Lifecycle: ``start()`` / ``stop()`` (or use as a context manager).
     ``stop()`` drains every pending request before returning.
+
+    Threads: ``mb-sched`` forms batches, ``mb-dispatch`` runs
+    ``infer_fn`` (non-blocking under JAX async dispatch), ``mb-complete``
+    runs ``finalize_fn`` on the pending result (the stage that actually
+    blocks on the device), and a small ``mb-post`` pool scatters per-item
+    results.  At most ``inflight`` dispatched-but-unfinalized batches
+    queue between dispatch and completion (plus the one each stage is
+    holding), which bounds device memory while letting H2D/compute/D2H
+    of consecutive batches overlap.  ``inflight=0`` finalizes inline in
+    the dispatch thread — the fully serialized legacy path.
     """
 
     def __init__(
         self,
-        infer_fn: Callable[[Hashable, List[Any]], List[Any]],
+        infer_fn: Callable[[Hashable, List[Any]], Any],
         post_fn: Optional[Callable[[Any, Any], Any]] = None,
         *,
+        finalize_fn: Optional[Callable[[Hashable, Any], List[Any]]] = None,
         max_batch: int = 8,
         max_wait_ms: float = 5.0,
         queue_depth: int = 4,
         post_workers: int = 2,
         max_pending: int = 0,
         admission: str = "block",
+        inflight: int = 1,
+        clock: Callable[[], float] = time.perf_counter,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if inflight < 0:
+            raise ValueError("inflight must be >= 0")
         if admission not in ("block", "reject"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.infer_fn = infer_fn
         self.post_fn = post_fn
+        self.finalize_fn = finalize_fn
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.queue_depth = queue_depth
         self.post_workers = post_workers
         self.max_pending = max_pending           # 0 = unbounded
         self.admission = admission
+        self.inflight = inflight
+        self.clock = clock
+        # flush deadlines are measured on the injected clock.  A clock
+        # that publishes advances (has ``subscribe``, like FakeClock) is
+        # event-driven: the scheduler waits without a real timeout and
+        # the clock wakes it on every advance.  Any plain callable
+        # (perf_counter, monotonic, ...) is assumed to tick in real
+        # seconds, so deadline deltas convert directly to wait timeouts.
+        self._event_driven = hasattr(clock, "subscribe")
+        if self._event_driven:
+            clock.subscribe(self.wake)
         self._cond = threading.Condition()
         self._pending: Dict[Hashable, deque] = {}
         self._n_pending = 0                      # total items across buckets
+        self._in_flight = 0                      # dispatched, not finalized
+        self._wall_s = 0.0                       # running wall across starts
         self._stop = False
         self._running = False
+        # stats are mutated from scheduler, dispatch, completion, post,
+        # and caller threads — every mutation holds _stats_lock (the
+        # counters are read-modify-write, so the GIL alone loses updates)
+        self._stats_lock = threading.Lock()
         self.stats: Dict[str, Any] = {
             "batches": [],            # {key, n, reason, queued_ms}
             "flush_full": 0,
@@ -149,6 +261,11 @@ class MicroBatcher:
             "submitted": 0,
             "rejected": 0,            # admission-control sheds
             "item_latency_s": [],     # submit -> future resolved
+            "pending_peak": 0,        # max queued items ever observed
+            "inflight_peak": 0,       # max dispatched-but-unfinalized
+            "dispatch_busy_s": 0.0,   # real time inside infer_fn
+            "complete_busy_s": 0.0,   # real time inside finalize_fn
+            "stage_occupancy": {},    # busy/wall per stage, set by stop()
         }
 
     # -- lifecycle -------------------------------------------------------------
@@ -157,18 +274,34 @@ class MicroBatcher:
             return self
         self._stop = False
         self._running = True
+        self._in_flight = 0
         self._infer_q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
+        # dispatch -> completion handoff; its bound IS the in-flight bound
+        self._done_q: "queue.Queue" = queue.Queue(
+            maxsize=max(self.inflight, 1)
+        )
         self._post_pool = ThreadPoolExecutor(
             self.post_workers, thread_name_prefix="mb-post"
         )
         self._sched_t = threading.Thread(
             target=self._sched_loop, name="mb-sched", daemon=True
         )
-        self._infer_t = threading.Thread(
-            target=self._infer_loop, name="mb-infer", daemon=True
+        self._dispatch_t = threading.Thread(
+            target=self._dispatch_loop, name="mb-dispatch", daemon=True
         )
+        self._complete_t = (
+            threading.Thread(target=self._complete_loop, name="mb-complete",
+                             daemon=True)
+            if self.inflight > 0 else None
+        )
+        # occupancy is a wall-time diagnostic, always on the real clock;
+        # wall accumulates across stop()/start() cycles because the busy
+        # counters (and every other stat) do too
+        self._t_start = time.perf_counter()
         self._sched_t.start()
-        self._infer_t.start()
+        self._dispatch_t.start()
+        if self._complete_t is not None:
+            self._complete_t.start()
         return self
 
     def stop(self) -> None:
@@ -178,8 +311,18 @@ class MicroBatcher:
             self._stop = True
             self._cond.notify_all()
         self._sched_t.join()
-        self._infer_t.join()
+        self._dispatch_t.join()
+        if self._complete_t is not None:
+            self._complete_t.join()
         self._post_pool.shutdown(wait=True)
+        self._wall_s += time.perf_counter() - self._t_start
+        with self._stats_lock:
+            self.stats["stage_occupancy"] = {
+                "dispatch": (self.stats["dispatch_busy_s"] / self._wall_s
+                             if self._wall_s > 0 else 0.0),
+                "complete": (self.stats["complete_busy_s"] / self._wall_s
+                             if self._wall_s > 0 else 0.0),
+            }
         self._running = False
 
     def __enter__(self) -> "MicroBatcher":
@@ -187,6 +330,12 @@ class MicroBatcher:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    def wake(self) -> None:
+        """Re-check flush deadlines now (the event-driven flush wait:
+        clock owners call this after advancing a non-real clock)."""
+        with self._cond:
+            self._cond.notify_all()
 
     # -- request side ----------------------------------------------------------
     def submit(self, key: Hashable, payload: Any) -> Future:
@@ -200,17 +349,21 @@ class MicroBatcher:
                 raise RuntimeError("MicroBatcher is not running")
             while self.max_pending > 0 and self._n_pending >= self.max_pending:
                 if self.admission == "reject":
-                    self.stats["rejected"] += 1
+                    with self._stats_lock:
+                        self.stats["rejected"] += 1
                     raise QueueFull(
                         f"pending queue at max_pending={self.max_pending}"
                     )
                 self._cond.wait()
                 if self._stop or not self._running:
                     raise RuntimeError("MicroBatcher is not running")
-            item = _Item(key, payload, fut, time.perf_counter())
+            item = _Item(key, payload, fut, self.clock())
             self._pending.setdefault(key, deque()).append(item)
             self._n_pending += 1
-            self.stats["submitted"] += 1
+            with self._stats_lock:
+                self.stats["submitted"] += 1
+                if self._n_pending > self.stats["pending_peak"]:
+                    self.stats["pending_peak"] = self._n_pending
             self._cond.notify_all()
         return fut
 
@@ -219,7 +372,7 @@ class MicroBatcher:
         """Block until a bucket is ready; None once stopped AND drained."""
         with self._cond:
             while True:
-                now = time.perf_counter()
+                now = self.clock()
                 ready_key, reason, deadline = None, None, None
                 for k, dq in self._pending.items():
                     if not dq:
@@ -244,10 +397,13 @@ class MicroBatcher:
                     return ready_key, reason, items
                 if self._stop:
                     return None
-                self._cond.wait(
-                    timeout=None if deadline is None
-                    else max(deadline - now, 0.0)
-                )
+                # an event-driven clock wakes us on every advance; a
+                # plain real-seconds clock converts the deadline delta
+                # to a wait timeout
+                timeout = None
+                if deadline is not None and not self._event_driven:
+                    timeout = max(deadline - now, 0.0)
+                self._cond.wait(timeout=timeout)
 
     def _sched_loop(self):
         while True:
@@ -256,29 +412,70 @@ class MicroBatcher:
             if batch is None:
                 return
 
-    # -- infer thread ----------------------------------------------------------
-    def _infer_loop(self):
+    # -- dispatch stage --------------------------------------------------------
+    def _dispatch_loop(self):
+        """Submit each batch's computation and hand the (possibly
+        un-materialized) result to the completion stage.  With an async
+        engine this thread never blocks on the device, so batch i+1's
+        H2D/compute dispatch overlaps batch i's D2H in mb-complete."""
         while True:
             got = self._infer_q.get()
             if got is None:
+                if self._complete_t is not None:
+                    self._done_q.put(None)
                 return
             key, reason, items = got
-            self.stats[f"flush_{reason}"] += 1
-            self.stats["batches"].append({
-                "key": key, "n": len(items), "reason": reason,
-                "queued_ms": (time.perf_counter() - items[0].t_submit) * 1e3,
-            })
+            with self._stats_lock:
+                self.stats[f"flush_{reason}"] += 1
+                self.stats["batches"].append({
+                    "key": key, "n": len(items), "reason": reason,
+                    "queued_ms": (self.clock() - items[0].t_submit) * 1e3,
+                })
+            t0 = time.perf_counter()
             try:
-                outs = self.infer_fn(key, [it.payload for it in items])
+                raw = self.infer_fn(key, [it.payload for it in items])
             except Exception as e:
                 for it in items:
                     it.future.set_exception(e)
                 continue
-            for it, out in zip(items, outs):
-                if self.post_fn is None:
-                    self._resolve(it, out)
-                else:
-                    self._post_pool.submit(self._post_one, it, out)
+            finally:
+                with self._stats_lock:
+                    self.stats["dispatch_busy_s"] += time.perf_counter() - t0
+            with self._stats_lock:
+                self._in_flight += 1
+                if self._in_flight > self.stats["inflight_peak"]:
+                    self.stats["inflight_peak"] = self._in_flight
+            if self._complete_t is None:
+                self._complete_one(key, items, raw)
+            else:
+                self._done_q.put((key, items, raw))   # bounded: backpressure
+
+    # -- completion stage ------------------------------------------------------
+    def _complete_loop(self):
+        while True:
+            got = self._done_q.get()
+            if got is None:
+                return
+            self._complete_one(*got)
+
+    def _complete_one(self, key, items, raw):
+        t0 = time.perf_counter()
+        try:
+            outs = raw if self.finalize_fn is None \
+                else self.finalize_fn(key, raw)
+        except Exception as e:
+            for it in items:
+                it.future.set_exception(e)
+            return
+        finally:
+            with self._stats_lock:
+                self._in_flight -= 1
+                self.stats["complete_busy_s"] += time.perf_counter() - t0
+        for it, out in zip(items, outs):
+            if self.post_fn is None:
+                self._resolve(it, out)
+            else:
+                self._post_pool.submit(self._post_one, it, out)
 
     def _post_one(self, item: _Item, out: Any):
         try:
@@ -287,7 +484,10 @@ class MicroBatcher:
             item.future.set_exception(e)
 
     def _resolve(self, item: _Item, result: Any):
-        self.stats["item_latency_s"].append(
-            time.perf_counter() - item.t_submit
-        )
+        # sample lands BEFORE set_result, so anything observable through
+        # result() implies its latency sample is already readable
+        with self._stats_lock:
+            self.stats["item_latency_s"].append(
+                self.clock() - item.t_submit
+            )
         item.future.set_result(result)

@@ -12,6 +12,11 @@ paper's throughput tricks:
   * module-level pipelining (C4): host preprocess / device FCN / host
     CC-postprocess overlap as pipeline stages, so stage i of image n
     overlaps stage i+1 of image n-1,
+  * async pipelined dispatch: the micro-batcher's infer path is split
+    into a dispatch stage (submits device work without blocking — JAX
+    async dispatch) and a completion stage (blocks on D2H), with a
+    bounded ``inflight`` queue between them, so H2D/compute/D2H of
+    batches from different buckets overlap (docs/serving.md),
   * engine compilation delegated to the ExecutionPlan layer
     (runtime/executor.py): one EngineFactory holds the models, params,
     and a (bucket, batch, plan)-keyed LRU; the service just picks a plan
@@ -40,7 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.batching import MicroBatcher, round_batch, wait_for_samples
+from repro.launch.batching import LatencyRecorder, MicroBatcher, round_batch
 from repro.runtime.executor import (
     EngineFactory,
     ExecutionPlan,
@@ -92,7 +97,8 @@ class STDService:
                  plan: Optional[ExecutionPlan] = None,
                  tall_plan: Optional[ExecutionPlan] = None,
                  planner: Optional[Planner] = None,
-                 max_pending: int = 0, admission: str = "block"):
+                 max_pending: int = 0, admission: str = "block",
+                 inflight: int = 1):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
@@ -121,6 +127,9 @@ class STDService:
         self.tall_plan = tall_plan
         self.max_pending = max_pending
         self.admission = admission
+        if inflight < 0:
+            raise ValueError("inflight must be >= 0")
+        self.inflight = inflight
         self._lock = threading.Lock()
         self._batcher: Optional[MicroBatcher] = None
         self._width = width
@@ -162,7 +171,10 @@ class STDService:
         over_tall = hw[0] > max(self.buckets)
         if self.planner is not None:
             plan = self.planner.choose(hw, batch, force_banded=over_tall)
-            self.stats["plan_choices"][tuple(hw)] = describe_plan(plan)
+            # routing runs on the dispatch thread while callers read
+            # stats — every stats mutation holds _lock
+            with self._lock:
+                self.stats["plan_choices"][tuple(hw)] = describe_plan(plan)
             return plan
         if self.tall_plan is not None and over_tall:
             return self.tall_plan
@@ -212,9 +224,13 @@ class STDService:
         pad[:h, :w] = img
         return pad, (h, w), transposed
 
-    def infer_labels(self, stack: np.ndarray,
-                     valid_hws: List[Tuple[int, int]]) -> np.ndarray:
-        """(B, bh, bw, 3) padded batch -> (B, bh/4, bw/4) int32 label maps.
+    def dispatch_labels(self, stack: np.ndarray,
+                        valid_hws: List[Tuple[int, int]]):
+        """(B, bh, bw, 3) padded batch -> pending (B, bh/4, bw/4) int32
+        label maps, NON-blocking: the returned device array is
+        un-materialized (JAX async dispatch), so the caller can submit
+        the next bucket's batch while this one's H2D/compute/D2H run.
+        Materialize with ``np.asarray`` (the completion stage's job).
 
         The batch axis may be padded past ``len(valid_hws)`` (batch-size
         rounding); trailing slots are zero images whose labels are
@@ -236,8 +252,12 @@ class STDService:
             valid_q[i] = (vh // 4, vw // 4)
         fn = self.factory.plan_fn(hw, b, plan)
         params = self.factory.params(hw)
-        return np.asarray(fn(params, jnp.asarray(stack),
-                             jnp.asarray(valid_q)))
+        return fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
+
+    def infer_labels(self, stack: np.ndarray,
+                     valid_hws: List[Tuple[int, int]]) -> np.ndarray:
+        """Blocking dispatch + materialize (the synchronous path)."""
+        return np.asarray(self.dispatch_labels(stack, valid_hws))
 
     def postprocess(self, labels: np.ndarray, valid_hw: Tuple[int, int],
                     transposed: bool) -> List[Dict]:
@@ -252,14 +272,18 @@ class STDService:
                 b["box"] = (y0, x0, y1, x1)
         return boxes
 
+    def _record_request(self, dt: float) -> None:
+        """One finished request's accounting (any thread may call)."""
+        with self._lock:
+            self.stats["n"] += 1
+            self.stats["latency_s"].append(dt)
+
     def __call__(self, img: np.ndarray) -> List[Dict]:
         t0 = time.perf_counter()
         x, valid, tr = self.preprocess(img)
         labels = self.infer_labels(x[None], [valid])[0]
         boxes = self.postprocess(labels, valid, tr)
-        with self._lock:
-            self.stats["n"] += 1
-            self.stats["latency_s"].append(time.perf_counter() - t0)
+        self._record_request(time.perf_counter() - t0)
         return boxes
 
     # -- pipelined server (C4 module-level multithreading) ---------------------
@@ -280,14 +304,24 @@ class STDService:
         t0 = time.perf_counter()
         results = pipe.run(images)
         dt = time.perf_counter() - t0
-        self.stats["pipelined_tps"] = len(images) / dt
+        with self._lock:
+            self.stats["pipelined_tps"] = len(images) / dt
         return results
 
     # -- micro-batched server (the tentpole path) ------------------------------
     def _mb_infer(self, key, payloads):
+        """Dispatch stage: submit one batch, return the PENDING device
+        array without blocking — the completion stage materializes it,
+        so the next bucket's batch dispatches while this one computes."""
         stack = np.stack([p[0] for p in payloads])
-        labels = self.infer_labels(stack, [p[1] for p in payloads])
-        return [labels[i] for i in range(len(payloads))]
+        return self.dispatch_labels(stack, [p[1] for p in payloads])
+
+    def _mb_finalize(self, key, pending):
+        """Completion stage: block on the device result (D2H) and split
+        the batched label map into per-item maps (the batch axis may be
+        padded; the scheduler zips against live items only)."""
+        labels = np.asarray(pending)
+        return [labels[i] for i in range(labels.shape[0])]
 
     def _mb_post(self, payload, labels):
         _, valid, tr = payload
@@ -298,8 +332,10 @@ class STDService:
         if self._batcher is None:
             self._batcher = MicroBatcher(
                 self._mb_infer, self._mb_post,
+                finalize_fn=self._mb_finalize,
                 max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
                 max_pending=self.max_pending, admission=self.admission,
+                inflight=self.inflight,
             )
             self._batcher.start()
         return self
@@ -307,7 +343,8 @@ class STDService:
     def stop_batched(self) -> None:
         if self._batcher is not None:
             self._batcher.stop()
-            self.stats["batching"] = self._batcher.stats
+            with self._lock:
+                self.stats["batching"] = self._batcher.stats
             self._batcher = None
 
     def submit(self, img: np.ndarray) -> Future:
@@ -324,25 +361,22 @@ class STDService:
         thread pool (so buckets actually fill), gather futures in order."""
         started_here = self._batcher is None
         self.start_batched()
-        lat: List[float] = []
+        rec = LatencyRecorder()
         t0 = time.perf_counter()
 
         def one(img):
             t = time.perf_counter()
-            fut = self.submit(img)
-            fut.add_done_callback(
-                lambda f, t=t: lat.append(time.perf_counter() - t)
-            )
-            return fut
+            return rec.track(self.submit(img), t0=t)
 
         try:
             with ThreadPoolExecutor(pre_workers) as ex:
                 futs = list(ex.map(one, images))
             results = [f.result(timeout=600) for f in futs]
             dt = time.perf_counter() - t0
-            wait_for_samples(lat, len(futs))
-            self.stats["batched_tps"] = len(images) / dt
-            self.stats["batched_latency_s"] = lat
+            rec.wait()               # event-driven: no callback lag race
+            with self._lock:
+                self.stats["batched_tps"] = len(images) / dt
+                self.stats["batched_latency_s"] = rec.samples
             return results
         finally:
             # a failed request must not strand the scheduler threads

@@ -48,6 +48,13 @@ async dispatch) only has to add plan types:
 Plans are frozen, hashable dataclasses: the serving engine LRU keys on
 ``(bucket_hw, batch, plan)`` and a mesh change is a new compiled engine,
 never silent reuse.
+
+Compiled engines are ASYNC: calling one returns un-materialized device
+arrays (JAX async dispatch), so the serving dispatch stage can submit
+the next batch while this one's H2D/compute/D2H run; materialization
+(``np.asarray``) is the completion stage's job (launch/batching.py).
+On accelerator backends the padded input stack's buffer is donated back
+to XLA (:func:`_donate_argnums`).
 """
 from __future__ import annotations
 
@@ -120,6 +127,17 @@ class _BandCtx:
         return halo_exchange(
             x, self.axis_name, halo, axis=1, axis_size=self.n_bands
         )
+
+
+def _donate_argnums() -> Tuple[int, ...]:
+    """Donation slots for compiled engines: the padded input stack
+    (arg 1) is built fresh per batch and never reused by the scheduler,
+    so on accelerator backends XLA may overwrite its buffer in place —
+    with async pipelined dispatch each in-flight batch owns its own
+    donated slot, so overlap never aliases live data.  CPU XLA cannot
+    donate and would warn on every call, so donation is gated off
+    there."""
+    return (1,) if jax.default_backend() in ("gpu", "tpu") else ()
 
 
 def plan_batch_multiple(plan: ExecutionPlan) -> int:
@@ -274,7 +292,7 @@ class EngineFactory:
             out = model.apply(params, x)
             return self._label_tail(out["score"], out["links"], valid_q)
 
-        return jax.jit(run)
+        return jax.jit(run, donate_argnums=_donate_argnums())
 
     def _compile_data_parallel(self, hw, batch, plan) -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
@@ -298,7 +316,7 @@ class EngineFactory:
             shard, plan.mesh,
             in_specs=(P(), specs["image"], P(plan.axis)),
             out_specs=specs["labels"],
-        ))
+        ), donate_argnums=_donate_argnums())
 
     def _compile_row_band(self, hw, plan) -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
@@ -346,7 +364,7 @@ class EngineFactory:
             score, links = sm(params, x)
             return self._label_tail(score, links, valid_q)
 
-        return jax.jit(run)
+        return jax.jit(run, donate_argnums=_donate_argnums())
 
     def _band_height(self, hw, bands: int) -> int:
         """Validated per-band height for splitting plane ``hw`` into

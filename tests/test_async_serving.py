@@ -1,0 +1,368 @@
+"""Async pipelined dispatch (paper §C4 module-level multithreading
+applied to the engine): the MicroBatcher's dispatch/completion split,
+the bounded in-flight queue, stats thread-safety, and async-vs-sync box
+parity.
+
+Fast tier — stub-engine semantics of the two-stage pipeline, a lost-
+update hammer on the service stats, and end-to-end SingleDevice parity
+(the async pipelined path must produce boxes identical to the plain
+``detect`` path: same engines, same math, different threading).
+
+Slow tier — subprocess 8-device (2x4 data x model) host mesh: GridPlan
+async-vs-sync parity with the same 0.5-threshold guard as
+tests/test_gridplan.py, and an in-flight stress run that holds the
+pipeline at its bound.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.batching import MicroBatcher
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+TESTS = os.path.dirname(__file__)
+
+
+def run_sub(body: str, timeout: int = 900) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {SRC!r})
+        sys.path.insert(0, {TESTS!r})
+    """) + textwrap.dedent(body)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+class TestDispatchCompletionSplit:
+    """Two-stage pipeline semantics on stub engines (no device work)."""
+
+    def test_finalize_runs_once_per_batch_results_ordered(self):
+        calls = {"infer": 0, "finalize": 0}
+
+        def infer(key, payloads):
+            calls["infer"] += 1
+            return ("pending", payloads)         # un-materialized stand-in
+
+        def finalize(key, raw):
+            calls["finalize"] += 1
+            tag, payloads = raw
+            assert tag == "pending"
+            return [p * 10 for p in payloads]
+
+        with MicroBatcher(infer, finalize_fn=finalize, max_batch=2,
+                          max_wait_ms=5, inflight=2) as mb:
+            futs = [mb.submit("a", i) for i in range(6)]
+            assert [f.result(timeout=10) for f in futs] == \
+                [0, 10, 20, 30, 40, 50]
+        assert calls == {"infer": 3, "finalize": 3}
+        assert mb.stats["inflight_peak"] >= 1
+
+    def test_finalize_error_propagates_to_the_batch(self):
+        def finalize(key, raw):
+            raise RuntimeError("D2H on fire")
+
+        with MicroBatcher(lambda k, ps: ps, finalize_fn=finalize,
+                          max_batch=2, max_wait_ms=5, inflight=1) as mb:
+            fut = mb.submit("a", 1)
+            with pytest.raises(RuntimeError, match="D2H on fire"):
+                fut.result(timeout=10)
+
+    def test_inflight_zero_is_the_synchronous_path(self):
+        """inflight=0 collapses completion into the dispatch thread: no
+        mb-complete thread exists, and dispatch never runs ahead."""
+        order = []
+
+        def infer(key, payloads):
+            order.append(("dispatch", threading.current_thread().name))
+            return payloads
+
+        def finalize(key, raw):
+            order.append(("complete", threading.current_thread().name))
+            return raw
+
+        with MicroBatcher(infer, finalize_fn=finalize, max_batch=1,
+                          max_wait_ms=5, inflight=0) as mb:
+            assert mb._complete_t is None
+            futs = [mb.submit("a", i) for i in range(3)]
+            assert [f.result(timeout=10) for f in futs] == [0, 1, 2]
+        # strict alternation: dispatch i+1 never starts before
+        # completion i finishes, and both run on the dispatch thread
+        assert [kind for kind, _ in order] == \
+            ["dispatch", "complete"] * 3
+        assert {name for _, name in order} == {"mb-dispatch"}
+        assert mb.stats["inflight_peak"] == 1
+
+    def test_bounded_inflight_queue_limits_dispatch_runahead(self):
+        """With completion gated, dispatch may run at most
+        1 (finalizing) + inflight (queued) + 1 (blocked on the handoff)
+        batches ahead — the in-flight bound that caps device memory."""
+        inflight = 2
+        gate = threading.Event()
+        dispatched = threading.Semaphore(0)
+
+        def infer(key, payloads):
+            dispatched.release()
+            return payloads
+
+        def finalize(key, raw):
+            gate.wait(10)
+            return raw
+
+        mb = MicroBatcher(infer, finalize_fn=finalize, max_batch=1,
+                          max_wait_ms=1, inflight=inflight).start()
+        try:
+            futs = [mb.submit("a", i) for i in range(8)]
+            for _ in range(inflight + 2):        # the allowed run-ahead
+                assert dispatched.acquire(timeout=5)
+            # the bound: no further batch may dispatch while completion
+            # is blocked (event-driven check, the 0.2 s is an upper
+            # bound on the negative, not a sleep the test relies on)
+            assert not dispatched.acquire(timeout=0.2), \
+                "dispatch overran the in-flight bound"
+        finally:
+            gate.set()
+            mb.stop()
+        assert [f.result(timeout=10) for f in futs] == list(range(8))
+        assert mb.stats["inflight_peak"] <= inflight + 2
+
+    def test_stage_stats_recorded(self):
+        with MicroBatcher(lambda k, ps: ps,
+                          finalize_fn=lambda k, r: r,
+                          max_batch=2, max_wait_ms=5, inflight=1) as mb:
+            futs = [mb.submit("a", i) for i in range(4)]
+            [f.result(timeout=10) for f in futs]
+        occ = mb.stats["stage_occupancy"]
+        assert set(occ) == {"dispatch", "complete"}
+        assert all(0.0 <= v for v in occ.values())
+        assert mb.stats["dispatch_busy_s"] >= 0.0
+        assert mb.stats["complete_busy_s"] >= 0.0
+        assert 1 <= mb.stats["inflight_peak"] <= 3
+
+
+class TestStatsThreadSafety:
+    """Counters are read-modify-write: without a lock the GIL alone
+    loses updates under thread preemption.  Hammer from many threads
+    with a tiny switch interval and assert nothing is lost."""
+
+    N_THREADS = 16
+    PER_THREAD = 500
+
+    def test_service_stats_no_lost_updates(self):
+        from repro.launch.serve import STDService
+
+        svc = STDService(width=0.125, buckets=(64,), max_batch=2)
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-5)
+        try:
+            ts = [threading.Thread(
+                target=lambda: [svc._record_request(1e-6)
+                                for _ in range(self.PER_THREAD)])
+                for _ in range(self.N_THREADS)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        finally:
+            sys.setswitchinterval(old)
+        total = self.N_THREADS * self.PER_THREAD
+        assert svc.stats["n"] == total, "lost n updates"
+        assert len(svc.stats["latency_s"]) == total, "lost latency samples"
+
+    def test_batcher_stats_no_lost_updates(self):
+        """submitted/rejected counters mutated from concurrent
+        submitters must account every attempt exactly once."""
+        from repro.launch.batching import QueueFull
+
+        gate = threading.Event()
+
+        def infer(key, payloads):
+            gate.wait(5)
+            return payloads
+
+        mb = MicroBatcher(infer, max_batch=4, max_wait_ms=1.0,
+                          max_pending=8, admission="reject").start()
+        attempts = self.N_THREADS * 50
+        shed = [0] * self.N_THREADS
+        futs = [[] for _ in range(self.N_THREADS)]
+
+        def producer(i):
+            for _ in range(50):
+                try:
+                    futs[i].append(mb.submit("b", i))
+                except QueueFull:
+                    shed[i] += 1
+
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-5)
+        try:
+            ts = [threading.Thread(target=producer, args=(i,))
+                  for i in range(self.N_THREADS)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        finally:
+            sys.setswitchinterval(old)
+            gate.set()
+            mb.stop()
+        n_ok = sum(len(f) for f in futs)
+        assert n_ok + sum(shed) == attempts
+        assert mb.stats["submitted"] == n_ok, "lost submitted updates"
+        assert mb.stats["rejected"] == sum(shed), "lost rejected updates"
+
+
+class TestAsyncSyncParitySingleDevice:
+    def test_pipelined_async_boxes_match_detect(self):
+        """The acceptance parity on one device: identical boxes from the
+        async pipelined path (inflight=2) and the plain detect path on
+        the same image set — same engines, same math, so equality is
+        exact (no threshold guard needed on a single plan)."""
+        from repro.data.images import RequestStream
+        from repro.launch.serve import STDService
+
+        images = RequestStream(
+            6, seed=3, hw_range=((48, 64), (48, 64))
+        ).images()
+        svc = STDService(width=0.125, buckets=(64,), max_batch=4,
+                         max_wait_ms=20, inflight=2)
+        key = lambda rs: [[b["box"] for b in r] for r in rs]
+        sync = key([svc(img) for img in images])
+        got = key(svc.serve_batched(images))
+        assert got == sync
+        b = svc.stats["batching"]
+        assert b["inflight_peak"] >= 1
+        assert set(b["stage_occupancy"]) == {"dispatch", "complete"}
+
+    def test_sync_and_async_schedulers_agree(self):
+        """inflight=0 (serialized) and inflight=2 (pipelined) schedulers
+        produce identical boxes through the same service."""
+        from repro.data.images import RequestStream
+        from repro.launch.serve import STDService
+
+        images = RequestStream(
+            4, seed=11, hw_range=((48, 64), (48, 64))
+        ).images()
+        key = lambda rs: [[b["box"] for b in r] for r in rs]
+        svc = STDService(width=0.125, buckets=(64,), max_batch=4,
+                         max_wait_ms=20, inflight=0)
+        sync_sched = key(svc.serve_batched(images))
+        svc.inflight = 2                 # next start_batched picks it up
+        async_sched = key(svc.serve_batched(images))
+        assert async_sched == sync_sched
+
+
+@pytest.mark.slow
+class TestAsyncGridParity:
+    def test_gridplan_async_matches_sync_on_8_devices(self):
+        """GridPlan on a 2x4 mesh: async pipelined boxes == sync detect
+        boxes (same engine, exact), and both match the SingleDevice
+        reference under the 0.5-threshold guard (cross-plan compare:
+        Winograd tile regrouping can shift scores ~1e-6, so skip the
+        cross-plan assertion when any score/link sits that close to the
+        threshold — same guard as tests/test_gridplan.py)."""
+        out = run_sub("""
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+            from repro.data.images import RequestStream
+            from repro.launch.mesh import make_mesh
+            from repro.launch.serve import STDService
+            from repro.runtime.executor import GridPlan
+
+            mesh = make_mesh((2, 4), ("data", "model"))
+            kw = dict(width=0.125, buckets=(128,), max_batch=4)
+            key = lambda rs: [[b["box"] for b in r] for r in rs]
+            images = RequestStream(
+                6, seed=3, hw_range=((48, 96), (48, 96))).images()
+
+            base = STDService(**kw)
+            want = key([base(img) for img in images])
+
+            svc = STDService(**kw, plan=GridPlan(mesh), inflight=2)
+            sync_grid = key([svc(img) for img in images])
+            async_grid = key(svc.serve_batched(images))
+            # same plan, same engine: async threading must not change
+            # a single box
+            assert async_grid == sync_grid, "async diverged from sync"
+
+            # cross-plan (grid vs single-device) under the threshold
+            # guard used by the gridplan property suite
+            model = base.factory.model((128, 128))
+            params = base.factory.params((128, 128))
+            fwd = jax.jit(lambda p, x: model.apply(p, x))
+            gap = float("inf")
+            for img in images:
+                x, _, _ = base.preprocess(img)
+                o = fwd(params, jnp.asarray(x[None]))
+                gap = min(gap, float(jnp.minimum(
+                    jnp.min(jnp.abs(o["score"] - 0.5)),
+                    jnp.min(jnp.abs(o["links"] - 0.5)))))
+            if gap < 1e-6:
+                print(f"ASYNC_GRID_GUARD_SKIP gap={gap}")
+            else:
+                assert async_grid == want, "grid diverged from reference"
+                print("ASYNC_GRID_PARITY_OK")
+            b = svc.stats["batching"]
+            assert b["inflight_peak"] >= 1
+            print("peak", b["inflight_peak"],
+                  "occ", b["stage_occupancy"])
+        """)
+        assert "ASYNC_GRID_PARITY_OK" in out or \
+            "ASYNC_GRID_GUARD_SKIP" in out
+
+    def test_inflight_stress_on_8_devices(self):
+        """Hold the async pipeline at its bound on the mesh: concurrent
+        producers through a GridPlan service with inflight=3 and a
+        bounded admission queue — every future resolves, the in-flight
+        peak respects the bound, and the accounting is exact."""
+        out = run_sub("""
+            import threading
+            import numpy as np
+            from concurrent.futures import ThreadPoolExecutor
+            from repro.data.images import RequestStream
+            from repro.launch.mesh import make_mesh
+            from repro.launch.serve import STDService
+            from repro.runtime.executor import GridPlan
+
+            mesh = make_mesh((2, 4), ("data", "model"))
+            svc = STDService(width=0.125, buckets=(128,), max_batch=4,
+                             max_wait_ms=4.0, plan=GridPlan(mesh),
+                             inflight=3, max_pending=16,
+                             admission="block")
+            images = RequestStream(
+                32, seed=5, hw_range=((48, 96), (48, 96))).images()
+            # warm the engines the scheduler can form (compile once)
+            svc.serve_batched(images[:8])
+
+            svc.start_batched()
+            try:
+                with ThreadPoolExecutor(8) as ex:
+                    futs = list(ex.map(svc.submit, images))
+                results = [f.result(timeout=600) for f in futs]
+            finally:
+                svc.stop_batched()
+            assert len(results) == 32
+            b = svc.stats["batching"]
+            assert b["submitted"] == 32
+            assert b["rejected"] == 0
+            assert 1 <= b["inflight_peak"] <= 3 + 2, b["inflight_peak"]
+            assert b["pending_peak"] <= 16
+            # sanity: the async path agrees with plain detect
+            want = [[x["box"] for x in svc(images[0])]]
+            got = [[x["box"] for x in results[0]]]
+            assert got == want, "stressed async diverged from detect"
+            print("ASYNC_STRESS_OK peak", b["inflight_peak"])
+        """)
+        assert "ASYNC_STRESS_OK" in out

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.runtime.planner import (
+    PLAN_KINDS,
     CostParams,
     PlanFeatures,
     Planner,
@@ -165,6 +166,84 @@ class TestRouting:
         kw = dict(data_n=4, model_n=1, params=TEST_PARAMS)
         assert choose_kind(f, (320, 64), 1, **kw) == "single_device"
         assert choose_kind(f, (320, 64), 8, **kw) == "data_parallel"
+
+
+class TestGoldenRouting:
+    """Frozen Planner.choose decisions over a canonical grid of
+    (bucket, batch, mesh-shape) inputs.  The monotonicity properties
+    above survive many cost-model edits; this table does not — any
+    change to CostParams defaults, the step-cost formula, or
+    eligibility that silently flips a routing decision fails HERE with
+    the exact input named.  If a flip is intentional, regenerate the
+    changed rows (choose_kind with tall_features + TEST_PARAMS) and
+    update the table in the same commit that changes the model."""
+
+    # (hw, batch, (data_n, model_n)) -> expected plan kind, generated
+    # from choose_kind(tall_features(*hw), hw, batch, ...) at
+    # TEST_PARAMS.  Rows group by mesh: unit mesh, data-only 4x1,
+    # model-only 1x4, and the 2x4 grid mesh.
+    GOLDEN = {
+        # unit mesh: nothing to shard over
+        ((64, 64), 1, (1, 1)): "single_device",
+        ((512, 64), 8, (1, 1)): "single_device",
+        ((2048, 64), 8, (1, 1)): "single_device",
+        # data-only mesh: batch depth decides, height never bands
+        ((64, 64), 1, (4, 1)): "single_device",
+        ((64, 64), 4, (4, 1)): "data_parallel",
+        ((64, 64), 8, (4, 1)): "data_parallel",
+        ((256, 64), 1, (4, 1)): "single_device",
+        ((256, 64), 4, (4, 1)): "data_parallel",
+        ((512, 64), 1, (4, 1)): "single_device",
+        ((512, 64), 8, (4, 1)): "data_parallel",
+        ((1024, 128), 1, (4, 1)): "single_device",
+        ((1024, 128), 4, (4, 1)): "data_parallel",
+        ((2048, 64), 1, (4, 1)): "single_device",
+        ((2048, 64), 8, (4, 1)): "data_parallel",
+        # model-only mesh: the height crossover (64 -> 128 at W=64/128
+        # with TEST_PARAMS), band-height invariant already satisfied
+        ((64, 64), 1, (1, 4)): "single_device",
+        ((64, 64), 8, (1, 4)): "single_device",
+        ((128, 128), 1, (1, 4)): "row_band",
+        ((128, 128), 8, (1, 4)): "row_band",
+        ((256, 64), 1, (1, 4)): "row_band",
+        ((512, 64), 4, (1, 4)): "row_band",
+        ((1024, 128), 8, (1, 4)): "row_band",
+        ((2048, 64), 1, (1, 4)): "row_band",
+        # 2x4 grid mesh: small planes stay single/data-parallel by
+        # batch depth; tall planes band at batch 1 and take the
+        # composed grid once the batch is deep enough to split too
+        ((64, 64), 1, (2, 4)): "single_device",
+        ((64, 64), 4, (2, 4)): "data_parallel",
+        ((64, 64), 8, (2, 4)): "data_parallel",
+        ((128, 128), 1, (2, 4)): "row_band",
+        ((128, 128), 4, (2, 4)): "grid",
+        ((256, 64), 1, (2, 4)): "row_band",
+        ((256, 64), 8, (2, 4)): "grid",
+        ((512, 64), 1, (2, 4)): "row_band",
+        ((512, 64), 4, (2, 4)): "grid",
+        ((1024, 128), 1, (2, 4)): "row_band",
+        ((1024, 128), 8, (2, 4)): "grid",
+        ((2048, 64), 1, (2, 4)): "row_band",
+        ((2048, 64), 8, (2, 4)): "grid",
+    }
+
+    def test_golden_table(self):
+        flips = []
+        for (hw, batch, (dn, mn)), want in self.GOLDEN.items():
+            got = choose_kind(tall_features(*hw), hw, batch,
+                              data_n=dn, model_n=mn, params=TEST_PARAMS)
+            if got != want:
+                flips.append(
+                    f"hw={hw} batch={batch} mesh=({dn},{mn}): "
+                    f"{want} -> {got}")
+        assert not flips, (
+            "cost-model edit flipped routing decisions (update the "
+            "golden table if intentional):\n" + "\n".join(flips))
+
+    def test_golden_covers_every_kind(self):
+        """The grid must keep exercising all four plan kinds — a table
+        that collapses to one kind no longer pins the crossovers."""
+        assert set(self.GOLDEN.values()) == set(PLAN_KINDS)
 
 
 class TestProgramFeatures:

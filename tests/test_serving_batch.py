@@ -1,7 +1,8 @@
 """Dynamic micro-batching scheduler tests: bucket grouping, full/timeout
-flush, error propagation, the engine LRU, batched cc_label vs the
-per-image reference, and end-to-end batched-vs-single-image box parity
-(including the §IV.B transposed over-wide path)."""
+flush (on the deterministic FakeClock harness — no real sleeps),
+admission control, error propagation, the engine LRU, batched cc_label
+vs the per-image reference, and end-to-end batched-vs-single-image box
+parity (including the §IV.B transposed over-wide path)."""
 import threading
 import time
 
@@ -9,7 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.batching import LRUCache, MicroBatcher, round_batch
+from repro.launch.batching import (FakeClock, LatencyRecorder, LRUCache,
+                                   MicroBatcher, round_batch)
 from repro.models.fcn import postprocess as pp
 
 
@@ -61,7 +63,27 @@ class TestMicroBatcher:
         assert mb.stats["flush_full"] == 2
         assert mb.stats["flush_timeout"] == 0
 
-    def test_timeout_flush_of_partial_batch(self):
+    def test_timeout_flush_on_fake_clock(self):
+        """Timeout flush driven entirely by the injected clock: the
+        partial batch must NOT flush while fake time stands still (no
+        flush reason can fire, so the assertions are race-free) and must
+        flush exactly when the deadline passes — zero real sleeps."""
+        clk = FakeClock()
+        with MicroBatcher(lambda k, ps: ps, max_batch=8,
+                          max_wait_ms=30, clock=clk) as mb:
+            fut = mb.submit("a", 42)
+            assert not fut.done()                # deadline not reached
+            clk.advance(0.029)                   # 29 ms < 30 ms: still no
+            assert not fut.done()
+            clk.advance(0.002)                   # past the deadline
+            assert fut.result(timeout=10) == 42
+        assert mb.stats["flush_timeout"] == 1
+        # latency accounting runs on the same clock: exactly the fake
+        # interval, not wall time
+        assert mb.stats["item_latency_s"] == [pytest.approx(0.031)]
+
+    def test_timeout_flush_real_clock(self):
+        """The default real-clock wait path still flushes on timeout."""
         with MicroBatcher(lambda k, ps: ps, max_batch=8,
                           max_wait_ms=30) as mb:
             t0 = time.perf_counter()
@@ -70,6 +92,18 @@ class TestMicroBatcher:
             dt = time.perf_counter() - t0
         assert mb.stats["flush_timeout"] == 1
         assert dt >= 0.025                       # waited for the deadline
+
+    def test_timeout_flush_with_alternate_real_clock(self):
+        """Any plain real-seconds callable works as the clock — only
+        clocks that publish advances (subscribe) switch the scheduler
+        to event-driven waits (regression: an identity check against
+        perf_counter used to leave e.g. time.monotonic waiting forever
+        on a partial batch)."""
+        with MicroBatcher(lambda k, ps: ps, max_batch=8,
+                          max_wait_ms=30, clock=time.monotonic) as mb:
+            fut = mb.submit("a", 42)
+            assert fut.result(timeout=10) == 42
+        assert mb.stats["flush_timeout"] == 1
 
     def test_stop_drains_pending(self):
         mb = MicroBatcher(lambda k, ps: ps, max_batch=8,
@@ -147,6 +181,40 @@ class TestMicroBatcher:
         assert mb.stats["rejected"] == 0
         assert mb.stats["submitted"] == 5
 
+    def test_admission_block_freed_by_timeout_flush_on_fake_clock(self):
+        """Backpressure release on the deterministic harness: with the
+        queue at max_pending and the fake clock frozen, a blocking
+        submit CANNOT return (no flush reason can fire) — advancing the
+        clock past the deadline flushes, frees capacity, and admits the
+        blocked request.  No real sleeps anywhere."""
+        clk = FakeClock()
+        done = []
+        mb = MicroBatcher(lambda k, ps: ps, max_batch=8,
+                          max_wait_ms=100, max_pending=2,
+                          admission="block", clock=clk).start()
+        try:
+            futs = [mb.submit("a", 0), mb.submit("a", 1)]
+            attempted = threading.Event()
+
+            def blocked_client():
+                attempted.set()
+                futs.append(mb.submit("a", 2))
+                done.append(True)
+
+            t = threading.Thread(target=blocked_client)
+            t.start()
+            attempted.wait(5)
+            # frozen clock + queue at cap: submit cannot have returned
+            assert not done
+            clk.advance(0.2)              # past the 100 ms deadline
+            t.join(timeout=5)
+            assert done                   # flush freed the slot
+        finally:
+            mb.stop()                     # drains the late admit
+        assert [f.result(timeout=5) for f in futs] == [0, 1, 2]
+        assert mb.stats["rejected"] == 0
+        assert mb.stats["pending_peak"] == 2
+
     def test_concurrent_submitters(self):
         results = {}
 
@@ -218,34 +286,26 @@ class TestAdmissionStress:
         assert len(got) == len(futs)     # no result lost or duplicated
 
     def test_block_never_exceeds_max_pending(self):
+        """The scheduler's own pending_peak stat (updated under the
+        queue lock, so it is exact — no sampling-thread race) must never
+        exceed the admission bound."""
         max_pending = 6
-        peak = []
-        stop_sampling = threading.Event()
 
         def infer(key, payloads):
             time.sleep(0.002)            # keep producers ahead of drain
             return payloads
 
-        def watcher(mb):
-            while not stop_sampling.is_set():
-                peak.append(mb._n_pending)
-                time.sleep(0.0005)
-
         mb = MicroBatcher(infer, max_batch=4, max_wait_ms=1.0,
                           max_pending=max_pending,
                           admission="block").start()
-        w = threading.Thread(target=watcher, args=(mb,))
-        w.start()
         try:
             futs, shed = self._hammer(mb, ())
         finally:
             mb.stop()
-            stop_sampling.set()
-            w.join(timeout=5)
         assert shed == 0                 # block policy never raises
         assert len(futs) == self.N_PRODUCERS * self.PER_PRODUCER
         assert all(f.done() for f in futs)
-        assert peak and max(peak) <= max_pending
+        assert 0 < mb.stats["pending_peak"] <= max_pending
         assert mb.stats["rejected"] == 0
 
     def test_shutdown_strands_no_future(self):
