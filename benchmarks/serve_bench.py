@@ -29,12 +29,24 @@ rounded up to the band-height unit.  Every run also prints a
 its estimated step cost — under ``auto`` that choice is also what
 actually ran.
 
+calibration (``--calibrate out.json``) — no load model at all: time
+every eligible (bucket, plan, batch) combo with blocked steps, fit the
+``runtime/planner.CostParams`` constants by least squares
+(runtime/telemetry.fit_cost_params), save them to JSON.
+``--cost-params out.json`` reloads the fit into the planner, so
+``--plan auto`` routes on measured constants instead of the v5e napkin
+defaults (the ROADMAP "calibrated cost model" loop).
+
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
           --open-loop --rates 8 32 128 --inflight 1 2 4
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 16 \
           --plan grid --mesh-shape 2 4 --open-loop --rates 8
+      PYTHONPATH=src python -m benchmarks.serve_bench \
+          --calibrate /tmp/cost.json --buckets 64 128 --max-batch 4
+      PYTHONPATH=src python -m benchmarks.serve_bench --plan auto \
+          --cost-params /tmp/cost.json
 """
 from __future__ import annotations
 
@@ -77,14 +89,19 @@ def _check_band_units(svc, planner, plan_kind, buckets):
         )
 
 
-def _plan_setup(plan_kind, mesh_shape, buckets, max_batch):
+def _plan_setup(plan_kind, mesh_shape, buckets, max_batch,
+                cost_params=None):
     """Resolve ``--plan``/``--mesh-shape`` into STDService kwargs, the
     cost-model planner used for the per-bucket report column, and the
-    (possibly band-unit-rounded) buckets."""
+    (possibly band-unit-rounded) buckets.  ``cost_params`` is a fitted
+    constants file from ``--calibrate`` (see run_calibration); when
+    given, the planner's analytic model runs on the fitted constants
+    instead of the v5e napkin defaults."""
     import jax
     from repro.launch.mesh import make_host_mesh
     from repro.runtime.executor import DataParallel, GridPlan, RowBand
     from repro.runtime.planner import Planner
+    from repro.runtime.telemetry import load_cost_params
 
     n = jax.device_count()
     if mesh_shape is None:
@@ -94,7 +111,8 @@ def _plan_setup(plan_kind, mesh_shape, buckets, max_batch):
             "rowband": (1, n),
         }.get(plan_kind, (2, n // 2) if n % 2 == 0 and n > 1 else (1, n))
     mesh = make_host_mesh(tuple(mesh_shape), ("data", "model"))
-    planner = Planner(mesh)
+    params = load_cost_params(cost_params) if cost_params else None
+    planner = Planner(mesh, params=params)
     kw = {}
     if plan_kind == "data":
         kw["plan"] = DataParallel(mesh)
@@ -152,12 +170,128 @@ def report_plan_choices(svc, planner, max_batch, verbose=True):
     return rows
 
 
+def run_calibration(out_path: str, *, width: float = 0.25,
+                    buckets=(64, 128), max_batch: int = 8,
+                    mesh_shape=None, steps: int = 3,
+                    verbose: bool = True):
+    """The measured half of the cost model: sweep every eligible
+    (bucket, plan_kind, batch) combo on the current mesh, time ``steps``
+    blocked-until-materialized engine steps each (after one warmup call
+    that absorbs the jit compile), least-squares fit the CostParams
+    constants from the measurements (runtime/telemetry.fit_cost_params
+    — the analytic step cost is linear in them), and save the fit to
+    ``out_path`` JSON.  ``--cost-params out_path`` reloads it into the
+    planner, so routing on THIS backend runs on constants this backend
+    actually exhibited."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import STDService
+    from repro.runtime.executor import plan_batch_multiple
+    from repro.runtime.planner import Planner, eligible_kinds
+    from repro.runtime.telemetry import (
+        CostBook,
+        StepMeasurement,
+        fit_cost_params,
+        save_cost_params,
+    )
+
+    if steps < 1:
+        raise SystemExit("--calib-steps must be >= 1")
+    n = jax.device_count()
+    if mesh_shape is None:
+        mesh_shape = (2, n // 2) if n % 2 == 0 and n > 1 else (1, n)
+    mesh = make_host_mesh(tuple(mesh_shape), ("data", "model"))
+    planner = Planner(mesh)
+    if planner.model_n > 1:
+        unit = planner.height_unit(DEEPEST_STRIDE)
+        buckets = tuple(sorted({-(-b // unit) * unit for b in buckets}))
+    if max_batch % max(planner.data_n, 1):
+        raise SystemExit(
+            f"--max-batch {max_batch} must be a multiple of the mesh "
+            f"data axis {planner.data_n}"
+        )
+    # measured_routing off: the sweep must visit every plan kind at
+    # fixed, analytic-routing-independent combos, not chase its own
+    # measurements around
+    svc = STDService(width=width, buckets=tuple(buckets),
+                     max_batch=max_batch, planner=planner,
+                     engine_cache_capacity=0, measured_routing=False)
+    _check_band_units(svc, planner,
+                      "grid" if planner.model_n > 1 else "single", buckets)
+
+    book = CostBook(warmup=0)      # the sweep warms explicitly below
+    rows = []
+    batch_points = sorted({1, max(1, max_batch // 2), max_batch})
+    for bkt in buckets:
+        hw = (bkt, bkt)
+        feats = svc._plan_features(hw)
+        kinds = eligible_kinds(hw, data_n=planner.data_n,
+                               model_n=planner.model_n,
+                               deepest_stride=feats.deepest_stride)
+        seen = set()
+        for kind in kinds:
+            plan = planner.plan_for_kind(kind)
+            m = plan_batch_multiple(plan)
+            for b0 in batch_points:
+                b = -(-b0 // m) * m          # divisibility padding
+                if b > max_batch or (kind, b) in seen:
+                    continue
+                seen.add((kind, b))
+                fn = svc.factory.plan_fn(hw, b, plan)
+                params = svc.factory.params(hw)
+                x = jnp.zeros((b, hw[0], hw[1], 3), jnp.float32)
+                vq = jnp.asarray([[hw[0] // 4, hw[1] // 4]] * b,
+                                 jnp.int32)
+                jax.block_until_ready(fn(params, x, vq))   # compile+warm
+                for _ in range(steps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(params, x, vq))
+                    dt = time.perf_counter() - t0
+                    book.record_step(hw, b, kind, dt)
+                    rows.append(StepMeasurement(
+                        flops=feats.flops, halo_bytes=feats.halo_bytes,
+                        halo_layers=feats.halo_layers, kind=kind,
+                        batch=b, data_n=planner.data_n,
+                        model_n=planner.model_n, seconds=dt,
+                    ))
+                if verbose:
+                    p50 = book.step_percentile(hw, b, kind, 50)
+                    print(f"calibrate,bucket={hw[0]}x{hw[1]},"
+                          f"plan={kind},batch={b},"
+                          f"p50 {p50 * 1e3:.2f} ms,steps={steps}")
+    fitted = fit_cost_params(rows)
+    save_cost_params(fitted, out_path, measurements=rows, meta={
+        "width": width, "buckets": list(buckets),
+        "mesh_shape": list(mesh_shape), "max_batch": max_batch,
+        "steps": steps, "backend": jax.default_backend(),
+    })
+    if verbose:
+        from repro.runtime.telemetry import cost_params_to_dict
+
+        for k, v in cost_params_to_dict(fitted).items():
+            print(f"calibrate_fit,{k}={v:.6g}")
+        fit_planner = Planner(mesh, params=fitted)
+        fit_planner.bind_features(svc._plan_features)
+        for bkt in buckets:
+            hw = (bkt, bkt)
+            for b in (1, max_batch):
+                from repro.runtime.executor import describe_plan
+
+                print(f"calibrate_route,bucket={hw[0]}x{hw[1]},"
+                      f"batch={b},"
+                      f"plan={describe_plan(fit_planner.choose(hw, b))}")
+        print(f"calibrate_saved,{out_path},rows={len(rows)}")
+    return fitted
+
+
 def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
                   pre_workers: int = 4, verbose: bool = True,
                   plan_kind: str = "single", mesh_shape=None,
-                  inflight: int = 1):
+                  inflight: int = 1, cost_params=None):
     """Returns {mode: {tps, p50_ms, p99_ms}} plus parity/batching info."""
     from repro.data.images import RequestStream
     from repro.launch.serve import STDService
@@ -165,7 +299,8 @@ def bench_serving(requests: int = 32, width: float = 0.25,
     if requests < 1:
         raise SystemExit("--requests must be >= 1")
     extra_kw, planner, buckets = _plan_setup(
-        plan_kind, mesh_shape, tuple(buckets), max_batch
+        plan_kind, mesh_shape, tuple(buckets), max_batch,
+        cost_params=cost_params,
     )
     images = RequestStream(
         requests, seed=seed,
@@ -174,7 +309,13 @@ def bench_serving(requests: int = 32, width: float = 0.25,
     svc = STDService(width=width, buckets=tuple(buckets),
                      max_batch=max_batch, max_wait_ms=max_wait_ms,
                      engine_cache_capacity=0,      # hold every warm shape
-                     inflight=inflight, **extra_kw)
+                     inflight=inflight,
+                     # benchmarks need REPRODUCIBLE routing: the live
+                     # measured overlay would flip plans mid-measurement
+                     # (compile stalls inside the timed phase).  The
+                     # measured->fitted loop here is --calibrate +
+                     # --cost-params instead.
+                     measured_routing=False, **extra_kw)
     _check_band_units(svc, planner, plan_kind, buckets)
 
     results = {}
@@ -242,7 +383,7 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
                     seed: int = 0, max_pending: int = 0,
                     admission: str = "block", verbose: bool = True,
                     plan_kind: str = "single", mesh_shape=None,
-                    inflight_values=(2,)):
+                    inflight_values=(2,), cost_params=None):
     """Open-loop (Poisson arrival) serving: offered load vs achieved TPS
     and p50/p99 latency, per offered rate and per async pipeline depth
     (``inflight_values``; the synchronous depth 0 is always swept as
@@ -252,7 +393,8 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
     from repro.launch.serve import STDService
 
     extra_kw, planner, buckets = _plan_setup(
-        plan_kind, mesh_shape, tuple(buckets), max_batch
+        plan_kind, mesh_shape, tuple(buckets), max_batch,
+        cost_params=cost_params,
     )
     images = RequestStream(
         requests, seed=seed,
@@ -260,7 +402,9 @@ def bench_open_loop(requests: int = 32, rates=(8.0, 32.0),
     ).images()
     svc = STDService(width=width, buckets=tuple(buckets),
                      max_batch=max_batch, max_wait_ms=max_wait_ms,
-                     engine_cache_capacity=0, **extra_kw)
+                     engine_cache_capacity=0,
+                     measured_routing=False,       # see bench_serving
+                     **extra_kw)
     _check_band_units(svc, planner, plan_kind, buckets)
     # warm every pow2 (bucket, batch) engine the open-loop phase can form
     # (at low offered rates batches trickle in as 1s and 2s, sizes the
@@ -377,12 +521,34 @@ def main(argv=None):
                     metavar=("DATA", "MODEL"),
                     help="host mesh (data, model) axis sizes; default "
                          "derives from the visible device count")
+    ap.add_argument("--calibrate", metavar="OUT_JSON", default=None,
+                    help="run the calibration sweep ONLY: time every "
+                         "eligible (bucket, plan, batch) combo, "
+                         "least-squares fit the CostParams constants, "
+                         "save them to OUT_JSON, and exit")
+    ap.add_argument("--calib-steps", type=int, default=3,
+                    help="timed steps per (bucket, plan, batch) combo "
+                         "in --calibrate mode (one extra warmup call "
+                         "absorbs the compile)")
+    ap.add_argument("--cost-params", metavar="IN_JSON", default=None,
+                    help="load fitted CostParams from a --calibrate "
+                         "file; the planner (--plan auto and the "
+                         "serve_plan report) routes on them instead of "
+                         "the napkin defaults")
     args = ap.parse_args(argv)
+    if args.calibrate:
+        run_calibration(args.calibrate, width=args.width,
+                        buckets=tuple(args.buckets),
+                        max_batch=args.max_batch,
+                        mesh_shape=args.mesh_shape,
+                        steps=args.calib_steps)
+        return None
     out = bench_serving(args.requests, args.width, tuple(args.buckets),
                         args.max_batch, args.max_wait_ms, args.seed,
                         args.pre_workers, plan_kind=args.plan,
                         mesh_shape=args.mesh_shape,
-                        inflight=max(args.inflight))
+                        inflight=max(args.inflight),
+                        cost_params=args.cost_params)
     if args.plan == "auto":
         # routing is batch-dependent, so sequential (batch 1) and
         # micro-batched modes may legitimately run DIFFERENT plans for
@@ -402,6 +568,7 @@ def main(argv=None):
             args.seed, args.max_pending, args.admission,
             plan_kind=args.plan, mesh_shape=args.mesh_shape,
             inflight_values=tuple(args.inflight),
+            cost_params=args.cost_params,
         )
     return out
 

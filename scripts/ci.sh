@@ -30,6 +30,38 @@ echo "== tier-2: async pipelined dispatch parity + in-flight stress on the 8-dev
 # already ran in the tiers above.
 python -m pytest -q -m "slow" tests/test_async_serving.py
 
+echo "== tier-2: calibrate smoke — fit CostParams on host CPU, reload, route =="
+# A tiny serve_bench --calibrate sweep must produce a params file that
+# parses, reloads into CostParams, and routes the canonical bucket grid
+# identically to the in-memory fit (the --cost-params seam).
+calib_tmp="$(mktemp -d)"
+trap 'rm -rf "$calib_tmp"' EXIT
+python -m benchmarks.serve_bench --calibrate "$calib_tmp/cost_params.json" \
+  --width 0.125 --buckets 64 --max-batch 2 --calib-steps 2
+python - "$calib_tmp/cost_params.json" <<'PYEOF'
+import json, sys
+from repro.runtime.planner import CostParams, choose_kind, PlanFeatures
+from repro.runtime.telemetry import cost_params_from_dict, load_cost_params
+
+path = sys.argv[1]
+doc = json.load(open(path))
+assert doc["measurements"], "calibration saved no measurement rows"
+p1 = cost_params_from_dict(doc["cost_params"])
+p2 = load_cost_params(path)
+assert p1 == p2 and isinstance(p2, CostParams)
+feats = lambda h, w: PlanFeatures(flops=2e5 * h * w / 64.0,
+                                  halo_bytes=3e4 * w / 64.0,
+                                  deepest_stride=32)
+grid = [((h, w), b, (dn, mn))
+        for (h, w) in ((64, 64), (128, 128), (512, 64), (2048, 64))
+        for b in (1, 8) for (dn, mn) in ((1, 1), (4, 1), (1, 4), (2, 4))]
+route = lambda p: [choose_kind(feats(*hw), hw, b, data_n=dn, model_n=mn,
+                               params=p) for hw, b, (dn, mn) in grid]
+assert route(p1) == route(p2), "reloaded params routed differently"
+print(f"calibrate smoke OK: {len(doc['measurements'])} rows, "
+      f"{len(grid)} routes identical after reload")
+PYEOF
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Regenerate tests/test_planner.py::TestGoldenRouting.GOLDEN.
+
+The golden table freezes Planner routing decisions over a canonical
+grid of (bucket, batch, mesh-shape) inputs so any cost-model edit that
+silently flips a route fails with the exact input named.  When a flip
+is INTENTIONAL (a CostParams change, a new step-cost term, an
+eligibility tweak), run this script: it recomputes every row with the
+test module's own ``tall_features`` + ``TEST_PARAMS`` through
+``runtime/planner.choose_kind`` and rewrites the block between the
+``# GOLDEN-BEGIN`` / ``# GOLDEN-END`` markers in place — so the golden
+updates in the same commit that changes the model, never by hand.
+
+  PYTHONPATH=src python scripts/regen_golden_routing.py [--check]
+
+``--check`` recomputes without writing and exits 1 if the tracked
+table is stale (CI-friendly).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TEST_FILE = os.path.join(REPO, "tests", "test_planner.py")
+BEGIN = "# GOLDEN-BEGIN"
+END = "# GOLDEN-END"
+
+# The canonical grid: per mesh shape, a comment line and the
+# (hw, batch) rows frozen for it.  Editing THIS list (not the test
+# file) is how the canonical coverage grows; test_golden_covers_every_
+# kind keeps it honest about exercising all four plan kinds.
+CANONICAL = [
+    ((1, 1), "unit mesh: nothing to shard over", [
+        ((64, 64), 1), ((512, 64), 8), ((2048, 64), 8),
+    ]),
+    ((4, 1), "data-only mesh: batch depth decides, height never bands", [
+        ((64, 64), 1), ((64, 64), 4), ((64, 64), 8),
+        ((256, 64), 1), ((256, 64), 4),
+        ((512, 64), 1), ((512, 64), 8),
+        ((1024, 128), 1), ((1024, 128), 4),
+        ((2048, 64), 1), ((2048, 64), 8),
+    ]),
+    ((1, 4), "model-only mesh: the height crossover (64 -> 128 at "
+             "W=64/128\n        # with TEST_PARAMS), band-height "
+             "invariant already satisfied", [
+        ((64, 64), 1), ((64, 64), 8),
+        ((128, 128), 1), ((128, 128), 8),
+        ((256, 64), 1), ((512, 64), 4), ((1024, 128), 8),
+        ((2048, 64), 1),
+    ]),
+    ((2, 4), "2x4 grid mesh: small planes stay single/data-parallel "
+             "by\n        # batch depth; tall planes band at batch 1 "
+             "and take the\n        # composed grid once the batch is "
+             "deep enough to split too", [
+        ((64, 64), 1), ((64, 64), 4), ((64, 64), 8),
+        ((128, 128), 1), ((128, 128), 4),
+        ((256, 64), 1), ((256, 64), 8),
+        ((512, 64), 1), ((512, 64), 4),
+        ((1024, 128), 1), ((1024, 128), 8),
+        ((2048, 64), 1), ((2048, 64), 8),
+    ]),
+]
+
+
+def _load_test_module():
+    """tests/ is not a package; load the module straight off its file
+    so we reuse its tall_features + TEST_PARAMS verbatim."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    spec = importlib.util.spec_from_file_location("_golden_src", TEST_FILE)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def render_block(mod) -> str:
+    from repro.runtime.planner import choose_kind
+
+    lines = [f"    {BEGIN} (generated: scripts/regen_golden_routing.py)",
+             "    GOLDEN = {"]
+    for (dn, mn), comment, rows in CANONICAL:
+        lines.append(f"        # {comment}")
+        for hw, batch in rows:
+            kind = choose_kind(mod.tall_features(*hw), hw, batch,
+                               data_n=dn, model_n=mn,
+                               params=mod.TEST_PARAMS)
+            lines.append(
+                f"        ({hw}, {batch}, ({dn}, {mn})): \"{kind}\",")
+    lines += ["    }", f"    {END}"]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the tracked table is stale, "
+                         "write nothing")
+    args = ap.parse_args(argv)
+
+    mod = _load_test_module()
+    block = render_block(mod)
+    with open(TEST_FILE) as f:
+        src = f.read()
+    pat = re.compile(
+        rf"^    {re.escape(BEGIN)}.*?^    {re.escape(END)}$",
+        re.DOTALL | re.MULTILINE,
+    )
+    if not pat.search(src):
+        print(f"markers {BEGIN}/{END} not found in {TEST_FILE}",
+              file=sys.stderr)
+        return 2
+    new = pat.sub(lambda _: block, src, count=1)
+    if new == src:
+        print("golden routing table up to date")
+        return 0
+    if args.check:
+        print("golden routing table is STALE — run "
+              "scripts/regen_golden_routing.py", file=sys.stderr)
+        return 1
+    with open(TEST_FILE, "w") as f:
+        f.write(new)
+    print(f"rewrote GOLDEN block in {TEST_FILE}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

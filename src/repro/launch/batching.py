@@ -215,6 +215,7 @@ class MicroBatcher:
         admission: str = "block",
         inflight: int = 1,
         clock: Callable[[], float] = time.perf_counter,
+        book: Optional[Any] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -233,6 +234,14 @@ class MicroBatcher:
         self.admission = admission
         self.inflight = inflight
         self.clock = clock
+        # telemetry sink (runtime/telemetry.CostBook): per-batch stage
+        # timing series, shed/submit counters, batch occupancy — the
+        # autoscaling signals STDService.metrics_snapshot() exports
+        # (live queue depth / in-flight come from stats_snapshot(), so
+        # their metric names stay per-batcher even on a shared book).
+        # The book carries its own leaf lock and never takes _cond or
+        # _stats_lock, so recording from any point here is inversion-free.
+        self.book = book
         # flush deadlines are measured on the injected clock.  A clock
         # that publishes advances (has ``subscribe``, like FakeClock) is
         # event-driven: the scheduler waits without a real timeout and
@@ -259,6 +268,7 @@ class MicroBatcher:
             "flush_timeout": 0,
             "flush_drain": 0,
             "submitted": 0,
+            "batch_items": 0,         # running sum of formed-batch sizes
             "rejected": 0,            # admission-control sheds
             "item_latency_s": [],     # submit -> future resolved
             "pending_peak": 0,        # max queued items ever observed
@@ -337,6 +347,25 @@ class MicroBatcher:
         with self._cond:
             self._cond.notify_all()
 
+    def stats_snapshot(self) -> Dict[str, float]:
+        """Scalar stats copied under the lock, plus the live queue
+        depth and in-flight count — safe to scrape while the scheduler
+        runs (STDService.metrics_snapshot feeds autoscalers from
+        this)."""
+        with self._stats_lock:
+            out = {k: float(v) for k, v in self.stats.items()
+                   if isinstance(v, (int, float))}
+            out["inflight"] = float(self._in_flight)
+            # running counters, not an O(batches) scan — scrapes must
+            # not stall the per-batch hot paths behind _stats_lock
+            n_batches = len(self.stats["batches"])
+            if n_batches:
+                out["mean_batch"] = self.stats["batch_items"] / n_batches
+                out["batch_occupancy"] = out["mean_batch"] / self.max_batch
+        with self._cond:
+            out["queue_depth"] = float(self._n_pending)
+        return out
+
     # -- request side ----------------------------------------------------------
     def submit(self, key: Hashable, payload: Any) -> Future:
         """Enqueue one request.  At ``max_pending`` queued items the
@@ -351,6 +380,8 @@ class MicroBatcher:
                 if self.admission == "reject":
                     with self._stats_lock:
                         self.stats["rejected"] += 1
+                    if self.book is not None:
+                        self.book.incr("mb_shed")
                     raise QueueFull(
                         f"pending queue at max_pending={self.max_pending}"
                     )
@@ -364,6 +395,8 @@ class MicroBatcher:
                 self.stats["submitted"] += 1
                 if self._n_pending > self.stats["pending_peak"]:
                     self.stats["pending_peak"] = self._n_pending
+            if self.book is not None:
+                self.book.incr("mb_submitted")
             self._cond.notify_all()
         return fut
 
@@ -427,10 +460,14 @@ class MicroBatcher:
             key, reason, items = got
             with self._stats_lock:
                 self.stats[f"flush_{reason}"] += 1
+                self.stats["batch_items"] += len(items)
                 self.stats["batches"].append({
                     "key": key, "n": len(items), "reason": reason,
                     "queued_ms": (self.clock() - items[0].t_submit) * 1e3,
                 })
+            if self.book is not None:
+                self.book.observe("mb_batch_occupancy",
+                                  len(items) / self.max_batch)
             t0 = time.perf_counter()
             try:
                 raw = self.infer_fn(key, [it.payload for it in items])
@@ -439,8 +476,11 @@ class MicroBatcher:
                     it.future.set_exception(e)
                 continue
             finally:
+                dt = time.perf_counter() - t0
                 with self._stats_lock:
-                    self.stats["dispatch_busy_s"] += time.perf_counter() - t0
+                    self.stats["dispatch_busy_s"] += dt
+                if self.book is not None:
+                    self.book.observe("mb_dispatch_s", dt)
             with self._stats_lock:
                 self._in_flight += 1
                 if self._in_flight > self.stats["inflight_peak"]:
@@ -468,9 +508,12 @@ class MicroBatcher:
                 it.future.set_exception(e)
             return
         finally:
+            dt = time.perf_counter() - t0
             with self._stats_lock:
                 self._in_flight -= 1
-                self.stats["complete_busy_s"] += time.perf_counter() - t0
+                self.stats["complete_busy_s"] += dt
+            if self.book is not None:
+                self.book.observe("mb_complete_s", dt)
         for it, out in zip(items, outs):
             if self.post_fn is None:
                 self._resolve(it, out)

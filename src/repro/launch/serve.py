@@ -30,6 +30,14 @@ paper's throughput tricks:
     FLOPs + halo bytes + batch-split occupancy — heterogeneous buckets
     in one service then route to different plans through the same
     engine LRU,
+  * measured-cost telemetry: every layer writes into one
+    runtime/telemetry.CostBook (engine dispatch walls, full
+    dispatch-through-D2H step walls, scheduler stage timings and queue
+    gauges); with a planner configured the measured step EWMAs overlay
+    the analytic cost model (``MeasuredCost``), so routing adapts
+    online to what steps actually cost, and
+    ``metrics_snapshot()`` / ``metrics_prometheus()`` export the lot
+    in a flat scrapeable form for autoscalers,
   * TPS + latency accounting (feeds the Fig. 9a benchmark).
 
   PYTHONPATH=src python -m repro.launch.serve --requests 32 --width 0.25
@@ -53,9 +61,11 @@ from repro.runtime.executor import (
     band_height_unit,
     describe_plan,
     plan_batch_multiple,
+    plan_kind,
 )
 from repro.runtime.pipeline import HostPipeline
 from repro.runtime.planner import Planner, features_for_program
+from repro.runtime.telemetry import CostBook, prometheus_text
 
 MAX_WIDTH = 4096          # the paper's width limit
 
@@ -98,7 +108,9 @@ class STDService:
                  tall_plan: Optional[ExecutionPlan] = None,
                  planner: Optional[Planner] = None,
                  max_pending: int = 0, admission: str = "block",
-                 inflight: int = 1):
+                 inflight: int = 1,
+                 book: Optional[CostBook] = None,
+                 measured_routing: bool = True):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
@@ -134,6 +146,11 @@ class STDService:
         self._batcher: Optional[MicroBatcher] = None
         self._width = width
         self._mode = mode
+        # the telemetry book every layer writes into: engine dispatch
+        # walls (EngineFactory), full step walls (this service's
+        # completion path), scheduler stage timings/gauges
+        # (MicroBatcher) — metrics_snapshot() exports it all
+        self.book = book if book is not None else CostBook()
         self.factory = EngineFactory(
             lambda hw: PixelLinkModel(STDConfig(
                 backbone="vgg16", width=width, image_size=hw,
@@ -141,9 +158,15 @@ class STDService:
             )),
             score_thr=score_thr, link_thr=link_thr,
             capacity=engine_cache_capacity,
+            book=self.book,
         )
         if planner is not None:
             planner.bind_features(self._plan_features)
+            if measured_routing:
+                # overlay measured step EWMAs over the analytic model:
+                # combos the service has actually run route by what they
+                # actually cost, through the same engine LRU
+                planner.use_measurements(self.book)
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
                                       "transposed": 0, "plan_choices": {}}
 
@@ -224,18 +247,11 @@ class STDService:
         pad[:h, :w] = img
         return pad, (h, w), transposed
 
-    def dispatch_labels(self, stack: np.ndarray,
-                        valid_hws: List[Tuple[int, int]]):
-        """(B, bh, bw, 3) padded batch -> pending (B, bh/4, bw/4) int32
-        label maps, NON-blocking: the returned device array is
-        un-materialized (JAX async dispatch), so the caller can submit
-        the next bucket's batch while this one's H2D/compute/D2H run.
-        Materialize with ``np.asarray`` (the completion stage's job).
-
-        The batch axis may be padded past ``len(valid_hws)`` (batch-size
-        rounding); trailing slots are zero images whose labels are
-        discarded by the caller.
-        """
+    def _dispatch(self, stack: np.ndarray,
+                  valid_hws: List[Tuple[int, int]]):
+        """Route + pad + submit one batch; returns the pending device
+        array and the step-telemetry meta ``(hw, batch, kind, t0)`` the
+        completion path hands to :meth:`_record_step`."""
         hw = tuple(stack.shape[1:3])
         n_live = len(valid_hws)
         b = round_batch(n_live, self.max_batch, self.batch_round)
@@ -252,12 +268,43 @@ class STDService:
             valid_q[i] = (vh // 4, vw // 4)
         fn = self.factory.plan_fn(hw, b, plan)
         params = self.factory.params(hw)
-        return fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
+        t0 = time.perf_counter()
+        pending = fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
+        return pending, (hw, b, plan_kind(plan), t0)
+
+    def _record_step(self, meta) -> None:
+        """One materialized batch's dispatch-through-D2H wall into the
+        book — the ``stage="step"`` series MeasuredCost routes by.
+        This is the DEPLOYMENT wall: on the async path (inflight > 0)
+        it includes time queued behind earlier batches' finalize work,
+        which is plan-independent load, roughly uniform across
+        whichever plan runs — so steady-state measured-vs-measured
+        comparisons stay fair, but measured-vs-analytic ones are biased
+        under load (see "Calibrated routing" in docs/plans.md)."""
+        hw, b, kind, t0 = meta
+        self.book.record_step(hw, b, kind, time.perf_counter() - t0)
+
+    def dispatch_labels(self, stack: np.ndarray,
+                        valid_hws: List[Tuple[int, int]]):
+        """(B, bh, bw, 3) padded batch -> pending (B, bh/4, bw/4) int32
+        label maps, NON-blocking: the returned device array is
+        un-materialized (JAX async dispatch), so the caller can submit
+        the next bucket's batch while this one's H2D/compute/D2H run.
+        Materialize with ``np.asarray`` (the completion stage's job).
+
+        The batch axis may be padded past ``len(valid_hws)`` (batch-size
+        rounding); trailing slots are zero images whose labels are
+        discarded by the caller.
+        """
+        return self._dispatch(stack, valid_hws)[0]
 
     def infer_labels(self, stack: np.ndarray,
                      valid_hws: List[Tuple[int, int]]) -> np.ndarray:
         """Blocking dispatch + materialize (the synchronous path)."""
-        return np.asarray(self.dispatch_labels(stack, valid_hws))
+        pending, meta = self._dispatch(stack, valid_hws)
+        labels = np.asarray(pending)
+        self._record_step(meta)
+        return labels
 
     def postprocess(self, labels: np.ndarray, valid_hw: Tuple[int, int],
                     transposed: bool) -> List[Dict]:
@@ -277,6 +324,46 @@ class STDService:
         with self._lock:
             self.stats["n"] += 1
             self.stats["latency_s"].append(dt)
+
+    # -- scrapeable metrics (ROADMAP plan-aware autoscaling signals) -----------
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Everything an autoscaler needs, flat ``{metric_name: value}``
+        (labels embedded Prometheus-style, so the dict stays flat):
+        request counts and latency percentiles, the live per-bucket
+        plan choices, scheduler queue depth / shed rate / batch
+        occupancy / stage busy times (live batcher if running, else the
+        last stopped one), and the full telemetry book — measured step
+        EWMAs/percentiles per (bucket, batch, plan) plus scheduler
+        series.  Field meanings are documented in docs/serving.md.
+        Safe to call from any thread at any time."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            n = self.stats["n"]
+            lat = list(self.stats["latency_s"])
+            transposed = self.stats["transposed"]
+            choices = dict(self.stats["plan_choices"])
+            mb_snap = self.stats.get("batching_snapshot")
+            batcher = self._batcher
+        out["std_requests_total"] = float(n)
+        out["std_transposed_total"] = float(transposed)
+        if lat:
+            out["std_request_latency_p50_ms"] = float(
+                np.percentile(lat, 50) * 1e3)
+            out["std_request_latency_p99_ms"] = float(
+                np.percentile(lat, 99) * 1e3)
+        for hw, desc in sorted(choices.items()):
+            out[f'std_plan_choice{{bucket="{hw[0]}x{hw[1]}",'
+                f'plan="{desc}"}}'] = 1.0
+        if batcher is not None:             # live scrape beats the last stop
+            mb_snap = batcher.stats_snapshot()
+        for k, v in (mb_snap or {}).items():
+            out[f"std_mb_{k}"] = float(v)
+        out.update(self.book.snapshot())
+        return out
+
+    def metrics_prometheus(self) -> str:
+        """:meth:`metrics_snapshot` in Prometheus text-exposition form."""
+        return prometheus_text(self.metrics_snapshot())
 
     def __call__(self, img: np.ndarray) -> List[Dict]:
         t0 = time.perf_counter()
@@ -311,16 +398,20 @@ class STDService:
     # -- micro-batched server (the tentpole path) ------------------------------
     def _mb_infer(self, key, payloads):
         """Dispatch stage: submit one batch, return the PENDING device
-        array without blocking — the completion stage materializes it,
-        so the next bucket's batch dispatches while this one computes."""
+        array (plus step-telemetry meta) without blocking — the
+        completion stage materializes it, so the next bucket's batch
+        dispatches while this one computes."""
         stack = np.stack([p[0] for p in payloads])
-        return self.dispatch_labels(stack, [p[1] for p in payloads])
+        return self._dispatch(stack, [p[1] for p in payloads])
 
-    def _mb_finalize(self, key, pending):
-        """Completion stage: block on the device result (D2H) and split
-        the batched label map into per-item maps (the batch axis may be
-        padded; the scheduler zips against live items only)."""
+    def _mb_finalize(self, key, raw):
+        """Completion stage: block on the device result (D2H), record
+        the measured step wall, and split the batched label map into
+        per-item maps (the batch axis may be padded; the scheduler zips
+        against live items only)."""
+        pending, meta = raw
         labels = np.asarray(pending)
+        self._record_step(meta)
         return [labels[i] for i in range(labels.shape[0])]
 
     def _mb_post(self, payload, labels):
@@ -335,7 +426,7 @@ class STDService:
                 finalize_fn=self._mb_finalize,
                 max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
                 max_pending=self.max_pending, admission=self.admission,
-                inflight=self.inflight,
+                inflight=self.inflight, book=self.book,
             )
             self._batcher.start()
         return self
@@ -345,6 +436,9 @@ class STDService:
             self._batcher.stop()
             with self._lock:
                 self.stats["batching"] = self._batcher.stats
+                # scalar view survives the batcher for metric scrapes
+                self.stats["batching_snapshot"] = \
+                    self._batcher.stats_snapshot()
             self._batcher = None
 
     def submit(self, img: np.ndarray) -> Future:

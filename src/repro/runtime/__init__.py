@@ -1,4 +1,11 @@
-from . import collectives, executor, fault_tolerance, pipeline, sharding
+from . import (
+    collectives,
+    executor,
+    fault_tolerance,
+    pipeline,
+    sharding,
+    telemetry,
+)
 
 __all__ = ["collectives", "executor", "fault_tolerance", "pipeline",
-           "sharding"]
+           "sharding", "telemetry"]

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Callable, Dict, Tuple, Union
 
 import jax
@@ -173,6 +174,18 @@ def row_band_height_unit(plan: RowBand, deepest_stride: int) -> int:
     return band_height_unit(plan, deepest_stride)
 
 
+def plan_kind(plan: ExecutionPlan) -> str:
+    """The planner-side kind string for a plan instance — the key the
+    telemetry CostBook and runtime/planner.PLAN_KINDS share."""
+    if isinstance(plan, DataParallel):
+        return "data_parallel"
+    if isinstance(plan, RowBand):
+        return "row_band"
+    if isinstance(plan, GridPlan):
+        return "grid"
+    return "single_device"
+
+
 def describe_plan(plan: ExecutionPlan) -> str:
     if isinstance(plan, DataParallel):
         n = mesh_axis_sizes(plan.mesh).get(plan.axis, 1)
@@ -197,6 +210,16 @@ class EngineFactory:
     per-bucket param set serves every band plane derived from it).  The
     compiled callable is ``fn(params, x, valid_q) -> labels``: FCN
     forward, per-image valid-region masking, batched CC labeling.
+
+    With a telemetry ``book`` (runtime/telemetry.CostBook) every
+    compiled engine is wrapped once, at compile time, to record its
+    per-call wall keyed by (bucket_hw, batch, plan_kind) under
+    ``stage="dispatch"`` — the non-blocking engine-call side of the
+    measured-cost loop (engines return un-materialized arrays; the
+    serving layer records the dispatch-through-materialization
+    ``stage="step"`` wall the planner's MeasuredCost overlay reads).
+    The wrapper lives inside the LRU, so cache hits return the identical
+    callable.
     """
 
     def __init__(
@@ -206,10 +229,12 @@ class EngineFactory:
         score_thr: float = 0.5,
         link_thr: float = 0.5,
         capacity: int = 16,
+        book: Any = None,
     ):
         self.make_model = make_model
         self.score_thr = score_thr
         self.link_thr = link_thr
+        self.book = book
         # model/param caches are LRU-bounded like the engines: oversize
         # inputs clamp to an open-ended set of padded shapes (bucket_hw),
         # so unbounded dicts would leak a parameter tree per shape
@@ -255,12 +280,28 @@ class EngineFactory:
         if fn is not None:
             return fn
         fn = self._compile(tuple(hw), int(batch), plan)
+        if self.book is not None:
+            fn = self._timed(fn, tuple(hw), int(batch), plan_kind(plan))
         self.stats["compiled"].append(
             {"hw": tuple(hw), "batch": int(batch),
              "plan": describe_plan(plan)}
         )
         self._engines.put(key, fn)
         return fn
+
+    def _timed(self, fn: Callable, hw, batch: int, kind: str) -> Callable:
+        """Record each engine call's wall into the telemetry book.
+        This measures the DISPATCH side only — engines return pending
+        arrays, so blocking here would serialize the async pipeline."""
+        def timed(params, x, valid_q):
+            t0 = time.perf_counter()
+            out = fn(params, x, valid_q)
+            self.book.record_step(hw, batch, kind,
+                                  time.perf_counter() - t0,
+                                  stage="dispatch")
+            return out
+
+        return timed
 
     def _label_tail(self, score, links, valid_q):
         from repro.models.fcn import postprocess as pp

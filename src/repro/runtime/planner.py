@@ -32,11 +32,26 @@ ORDER of the per-plan costs and where the crossovers sit, both of which
 are monotone in the right directions — e.g. a taller plane can only move
 further toward row-banded plans (compute grows with H, halo bytes do
 not), which test_planner.py pins down.
+
+Costs reach the router through the :class:`CostProvider` seam rather
+than a ``CostParams`` default threaded everywhere:
+
+  * :class:`AnalyticCost` — the closed-form model above, parameterized
+    by one :class:`CostParams` (napkin defaults, or constants fitted by
+    ``benchmarks/serve_bench.py --calibrate`` via
+    runtime/telemetry.fit_cost_params);
+  * :class:`MeasuredCost` — an overlay over a telemetry
+    :class:`~repro.runtime.telemetry.CostBook`: once a
+    (bucket, batch, plan_kind) combo has ``min_observations`` measured
+    step times, routing uses the measured EWMA; unmeasured combos fall
+    back to the analytic model.  Wired by STDService, this adapts
+    routing online through the existing (bucket, batch, plan) engine
+    LRU — no recompiles, the measured winner is just picked next flush.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from jax.sharding import Mesh
 
@@ -98,11 +113,13 @@ def padded_batch(batch: int, data_n: int) -> int:
 
 def step_cost(features: PlanFeatures, kind: str, batch: int, *,
               data_n: int = 1, model_n: int = 1,
-              params: CostParams = CostParams()) -> float:
+              params: Optional[CostParams] = None) -> float:
     """Estimated seconds for one engine step of ``batch`` images under
-    plan ``kind`` on a (data_n, model_n) mesh."""
+    plan ``kind`` on a (data_n, model_n) mesh (the analytic model —
+    :class:`AnalyticCost` is its CostProvider wrapper)."""
     if kind not in PLAN_KINDS:
         raise ValueError(f"unknown plan kind {kind!r}")
+    params = params if params is not None else CostParams()
     dn = data_n if kind in ("data_parallel", "grid") else 1
     mn = model_n if kind in _BANDED else 1
     local_b = padded_batch(batch, dn) // dn   # occupancy: padding runs too
@@ -115,6 +132,70 @@ def step_cost(features: PlanFeatures, kind: str, batch: int, *,
     overhead = (params.dispatch_overhead_s
                 + params.collective_overhead_s * ((dn > 1) + (mn > 1)))
     return compute + halo + overhead
+
+
+class CostProvider(Protocol):
+    """The one seam routing reads costs through: estimated (or
+    measured) seconds for one step of ``batch`` images of bucket ``hw``
+    under plan ``kind`` on a (data_n, model_n) mesh.  ``hw`` rides
+    along so measured providers can key their lookups; the analytic
+    provider ignores it (features already encode the plane)."""
+
+    def step_cost(self, features: PlanFeatures, hw: Tuple[int, int],
+                  kind: str, batch: int, *, data_n: int,
+                  model_n: int) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticCost:
+    """Today's closed-form model as a CostProvider — the fallback for
+    every combo nothing has measured yet.  ``params`` may be the napkin
+    defaults or constants fitted by serve_bench --calibrate."""
+
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    def step_cost(self, features: PlanFeatures, hw: Tuple[int, int],
+                  kind: str, batch: int, *, data_n: int,
+                  model_n: int) -> float:
+        return step_cost(features, kind, batch, data_n=data_n,
+                         model_n=model_n, params=self.params)
+
+
+class MeasuredCost:
+    """Measured-step overlay: once ``book`` (a duck-typed
+    runtime/telemetry.CostBook) holds at least ``min_observations``
+    samples for an exact (hw, batch, kind) combo, its EWMA wall time IS
+    the cost; anything unmeasured falls back to ``fallback`` (the
+    analytic model).  Mixing is sound because both sides are plain
+    seconds per step — the overlay just replaces an estimate with an
+    observation, so routing adapts online without recompiles."""
+
+    #: default observation floor before a measurement overrides the
+    #: analytic estimate (one-off warmup/compile walls must not route)
+    MIN_OBSERVATIONS = 3
+
+    def __init__(self, book, fallback: Optional[CostProvider] = None, *,
+                 min_observations: int = MIN_OBSERVATIONS,
+                 stage: str = "step"):
+        if min_observations < 1:
+            raise ValueError("min_observations must be >= 1")
+        self.book = book
+        self.fallback: CostProvider = (
+            fallback if fallback is not None else AnalyticCost())
+        self.min_observations = min_observations
+        self.stage = stage
+
+    def step_cost(self, features: PlanFeatures, hw: Tuple[int, int],
+                  kind: str, batch: int, *, data_n: int,
+                  model_n: int) -> float:
+        if self.book.step_count(hw, batch, kind,
+                                stage=self.stage) >= self.min_observations:
+            measured = self.book.step_ewma(hw, batch, kind,
+                                           stage=self.stage)
+            if measured is not None:
+                return measured
+        return self.fallback.step_cost(features, hw, kind, batch,
+                                       data_n=data_n, model_n=model_n)
 
 
 def eligible_kinds(hw: Tuple[int, int], *, data_n: int, model_n: int,
@@ -135,12 +216,21 @@ def eligible_kinds(hw: Tuple[int, int], *, data_n: int, model_n: int,
 
 def choose_kind(features: PlanFeatures, hw: Tuple[int, int], batch: int, *,
                 data_n: int, model_n: int,
-                params: CostParams = CostParams(),
+                params: Optional[CostParams] = None,
+                cost: Optional[CostProvider] = None,
                 force_banded: bool = False) -> str:
     """Cheapest eligible plan kind; exact ties break toward the simpler
-    plan (PLAN_KINDS order).  ``force_banded`` restricts to row-banded
-    kinds when any is eligible — the over-tall/transposed routing rule
-    (launch/serve.py pads such heights to the band unit first)."""
+    plan (PLAN_KINDS order).  Costs come from ``cost`` (any
+    CostProvider — measured overlay, fitted analytic...); ``params``
+    is the analytic shorthand (``cost=AnalyticCost(params)``), and
+    passing both is a contradiction.  ``force_banded`` restricts to
+    row-banded kinds when any is eligible — the over-tall/transposed
+    routing rule (launch/serve.py pads such heights to the band unit
+    first)."""
+    if cost is not None and params is not None:
+        raise ValueError("pass either cost= or params=, not both")
+    provider: CostProvider = (cost if cost is not None
+                              else AnalyticCost(params or CostParams()))
     kinds = eligible_kinds(hw, data_n=data_n, model_n=model_n,
                            deepest_stride=features.deepest_stride)
     if force_banded:
@@ -148,8 +238,8 @@ def choose_kind(features: PlanFeatures, hw: Tuple[int, int], batch: int, *,
         kinds = banded or kinds
     return min(
         kinds,
-        key=lambda k: (step_cost(features, k, batch, data_n=data_n,
-                                 model_n=model_n, params=params),
+        key=lambda k: (provider.step_cost(features, hw, k, batch,
+                                          data_n=data_n, model_n=model_n),
                        PLAN_KINDS.index(k)),
     )
 
@@ -164,22 +254,59 @@ class Planner:
     left None at construction (``Planner(mesh)``) and bound later with
     :meth:`bind_features` — STDService does exactly that, so callers can
     hand the service a bare mesh-shaped planner.
+
+    Costs flow through ``self.cost`` (a :class:`CostProvider`):
+    ``params=`` is the analytic shorthand, ``cost=`` injects any
+    provider, and :meth:`use_measurements` overlays a telemetry
+    CostBook over whatever provider is current — STDService wires its
+    book in so routing tracks measured step times online.
     """
 
     def __init__(self, mesh: Mesh,
                  features_fn: Optional[
                      Callable[[Tuple[int, int]], PlanFeatures]] = None, *,
                  data_axis: str = "data", model_axis: str = "model",
-                 params: CostParams = CostParams()):
+                 params: Optional[CostParams] = None,
+                 cost: Optional[CostProvider] = None):
+        if cost is not None and params is not None:
+            raise ValueError("pass either cost= or params=, not both")
         sizes = mesh_axis_sizes(mesh)
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axis = model_axis
         self.data_n = sizes.get(data_axis, 1)
         self.model_n = sizes.get(model_axis, 1)
-        self.params = params
+        self.cost: CostProvider = (
+            cost if cost is not None
+            else AnalyticCost(params or CostParams()))
         self._features_fn = features_fn
         self._features: Dict[Tuple[int, int], PlanFeatures] = {}
+
+    @property
+    def params(self) -> CostParams:
+        """The analytic constants routing currently falls back to (the
+        provider itself for AnalyticCost, its fallback chain's params
+        for overlays) — introspection/back-compat."""
+        c: Any = self.cost
+        while not isinstance(c, AnalyticCost):
+            nxt = getattr(c, "fallback", None)
+            if nxt is None:
+                return CostParams()
+            c = nxt
+        return c.params
+
+    def use_measurements(self, book, *,
+                         min_observations: int =
+                         MeasuredCost.MIN_OBSERVATIONS) -> "Planner":
+        """Overlay a telemetry CostBook over the current provider:
+        combos with >= min_observations measured steps route by their
+        EWMA wall time, the rest keep the current (analytic) costs.
+        Idempotent per book — re-wiring the same book is a no-op."""
+        if isinstance(self.cost, MeasuredCost) and self.cost.book is book:
+            return self
+        self.cost = MeasuredCost(book, fallback=self.cost,
+                                 min_observations=min_observations)
+        return self
 
     def bind_features(
         self, features_fn: Callable[[Tuple[int, int]], PlanFeatures],
@@ -212,8 +339,8 @@ class Planner:
         """The per-kind cost table for one bucket (bench introspection)."""
         f = self.features(hw)
         return {
-            k: step_cost(f, k, batch, data_n=self.data_n,
-                         model_n=self.model_n, params=self.params)
+            k: self.cost.step_cost(f, hw, k, batch, data_n=self.data_n,
+                                   model_n=self.model_n)
             for k in eligible_kinds(hw, data_n=self.data_n,
                                     model_n=self.model_n,
                                     deepest_stride=f.deepest_stride)
@@ -223,7 +350,7 @@ class Planner:
                force_banded: bool = False) -> ExecutionPlan:
         kind = choose_kind(self.features(hw), hw, batch,
                            data_n=self.data_n, model_n=self.model_n,
-                           params=self.params, force_banded=force_banded)
+                           cost=self.cost, force_banded=force_banded)
         return self.plan_for_kind(kind)
 
     def plan_for_kind(self, kind: str) -> ExecutionPlan:

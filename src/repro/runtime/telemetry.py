@@ -1,0 +1,352 @@
+"""Telemetry + calibration: measured cost flowing from engines to the
+planner (ROADMAP "calibrated cost model" / "plan-aware autoscaling
+signals").
+
+The paper's §V efficiency claim rests on the mapping being tuned to
+*measured* behavior, not nominal FLOPs.  This module is the measurement
+half of that loop:
+
+  * :class:`CostBook` — the lock-guarded measurement store every layer
+    writes into.  Engine step times are keyed by
+    ``(bucket_hw, batch, plan_kind)`` (plus a ``stage`` dimension:
+    ``"dispatch"`` = the engine-call wall recorded by
+    runtime/executor.EngineFactory, ``"step"`` = dispatch through
+    materialization recorded by launch/serve.STDService); scheduler
+    stage timings / queue gauges / shed counters from
+    launch/batching.MicroBatcher land as named series in the same book.
+    Every series keeps a count, an EWMA, and a bounded window of recent
+    samples for p50/p99 — all mutations hold one lock, the same
+    stats-locking contract the PR 4 hammer tests pin on MicroBatcher.
+  * :func:`snapshot` / :func:`prometheus_text` — flat scrapeable
+    ``{metric_name: value}`` export (labels are embedded in the metric
+    name, Prometheus-style), surfaced by
+    ``STDService.metrics_snapshot()`` for autoscalers.
+  * :func:`fit_cost_params` — least-squares calibration: the analytic
+    step-cost model (runtime/planner.step_cost) is LINEAR in the five
+    :class:`~repro.runtime.planner.CostParams` constants, so a sweep of
+    measured (features, kind, batch, mesh) -> seconds rows determines
+    them directly.  ``benchmarks/serve_bench.py --calibrate out.json``
+    runs the sweep and saves the fit; ``--cost-params out.json``
+    reloads it (:func:`save_cost_params` / :func:`load_cost_params`
+    round-trip through JSON exactly).
+
+The planner side of the loop lives in runtime/planner.py:
+``MeasuredCost(book)`` overlays the analytic model once a combo has
+enough observations.  This module never imports the planner at the top
+level's hot path beyond CostParams, and the planner does not import
+this module at all (the book is duck-typed), so the layering stays
+one-directional.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import threading
+from collections import deque
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+StepKey = Tuple[Tuple[int, int], int, str]
+
+
+class _Series:
+    """Count + EWMA + bounded recent-sample window for one metric.
+
+    The window is a deterministic sliding reservoir (last ``maxlen``
+    samples), so percentile queries need no randomness and tests can
+    pin exact values."""
+
+    __slots__ = ("count", "ewma", "total", "window")
+
+    def __init__(self, window: int):
+        self.count = 0
+        self.ewma: Optional[float] = None
+        self.total = 0.0
+        self.window: deque = deque(maxlen=window)
+
+    def add(self, value: float, alpha: float) -> None:
+        self.count += 1
+        self.total += value
+        self.ewma = (value if self.ewma is None
+                     else alpha * value + (1.0 - alpha) * self.ewma)
+        self.window.append(value)
+
+    def percentile(self, q: float) -> Optional[float]:
+        if not self.window:
+            return None
+        xs = sorted(self.window)
+        i = min(len(xs) - 1, max(0, math.ceil(q / 100.0 * len(xs)) - 1))
+        return xs[i]
+
+
+class CostBook:
+    """Lock-guarded measurement store: engine step times keyed by
+    ``(bucket_hw, batch, plan_kind)`` and named scheduler/service
+    series, each with count / EWMA / p50 / p99.
+
+    Writers (engine wrappers, scheduler stages, service completion)
+    call :meth:`record_step`, :meth:`observe`, :meth:`incr`,
+    :meth:`set_gauge` from their own threads; every mutation and every
+    read holds ``_lock`` — the counters are read-modify-write, so the
+    GIL alone would lose updates (tests/test_telemetry.py hammers
+    this, the PR 4 lost-update pattern)."""
+
+    def __init__(self, *, ewma_alpha: float = 0.25, window: int = 256,
+                 warmup: int = 1):
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if warmup < 0:
+            raise ValueError("warmup must be >= 0")
+        self.ewma_alpha = ewma_alpha
+        self.window = window
+        # the first call of a compiled engine traces + XLA-compiles
+        # INSIDE the call (jit is lazy), a multi-second one-off that
+        # would poison a millisecond-scale EWMA — skip the first
+        # ``warmup`` samples per (combo, stage)
+        self.warmup = warmup
+        self._lock = threading.Lock()
+        self._steps: Dict[Tuple[StepKey, str], _Series] = {}
+        self._warm: Dict[Tuple[StepKey, str], int] = {}
+        self._series: Dict[str, _Series] = {}
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+
+    @staticmethod
+    def _step_key(hw, batch, kind) -> StepKey:
+        return ((int(hw[0]), int(hw[1])), int(batch), str(kind))
+
+    # -- writers ---------------------------------------------------------------
+    def record_step(self, hw: Tuple[int, int], batch: int, kind: str,
+                    seconds: float, *, stage: str = "step") -> None:
+        """One engine step's wall time for a (bucket, batch, plan_kind)
+        combo.  ``stage="dispatch"`` is the non-blocking engine-call
+        wall (executor); ``stage="step"`` is dispatch through
+        materialization (the routing-relevant one — MeasuredCost reads
+        it)."""
+        key = (self._step_key(hw, batch, kind), stage)
+        with self._lock:
+            warm = self._warm.get(key, 0)
+            if warm < self.warmup:
+                self._warm[key] = warm + 1
+                return
+            s = self._steps.get(key)
+            if s is None:
+                s = self._steps[key] = _Series(self.window)
+            s.add(float(seconds), self.ewma_alpha)
+
+    def observe(self, name: str, value: float) -> None:
+        """One sample of a named series (stage timings, occupancy...)."""
+        with self._lock:
+            s = self._series.get(name)
+            if s is None:
+                s = self._series[name] = _Series(self.window)
+            s.add(float(value), self.ewma_alpha)
+
+    def incr(self, name: str, n: float = 1.0) -> None:
+        """Monotonic counter (sheds, submissions...)."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + n
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Point-in-time gauge (queue depth, in-flight batches...)."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    # -- readers ---------------------------------------------------------------
+    def step_count(self, hw, batch, kind, *, stage: str = "step") -> int:
+        key = (self._step_key(hw, batch, kind), stage)
+        with self._lock:
+            s = self._steps.get(key)
+            return s.count if s is not None else 0
+
+    def step_ewma(self, hw, batch, kind, *,
+                  stage: str = "step") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage)
+        with self._lock:
+            s = self._steps.get(key)
+            return s.ewma if s is not None else None
+
+    def step_percentile(self, hw, batch, kind, q: float, *,
+                        stage: str = "step") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage)
+        with self._lock:
+            s = self._steps.get(key)
+            return s.percentile(q) if s is not None else None
+
+    def step_keys(self, *, stage: str = "step") -> List[StepKey]:
+        """Every (hw, batch, kind) combo with at least one sample."""
+        with self._lock:
+            return sorted(k for k, st in self._steps if st == stage)
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def gauge(self, name: str) -> Optional[float]:
+        with self._lock:
+            return self._gauges.get(name)
+
+    def snapshot(self, prefix: str = "std_") -> Dict[str, float]:
+        """Flat scrapeable ``{metric_name: value}`` view of everything
+        in the book.  Labels are embedded Prometheus-style in the name,
+        so the dict stays flat: e.g.
+        ``std_step_ewma_s{bucket="128x64",batch="4",plan="row_band",
+        stage="step"}``."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            for ((hw, batch, kind), stage), s in sorted(
+                    self._steps.items()):
+                lbl = (f'{{bucket="{hw[0]}x{hw[1]}",batch="{batch}",'
+                       f'plan="{kind}",stage="{stage}"}}')
+                out[f"{prefix}step_count{lbl}"] = float(s.count)
+                if s.ewma is not None:
+                    out[f"{prefix}step_ewma_s{lbl}"] = s.ewma
+                p50, p99 = s.percentile(50), s.percentile(99)
+                if p50 is not None:
+                    out[f"{prefix}step_p50_s{lbl}"] = p50
+                    out[f"{prefix}step_p99_s{lbl}"] = p99
+            for name, s in sorted(self._series.items()):
+                out[f"{prefix}{name}_count"] = float(s.count)
+                if s.ewma is not None:
+                    out[f"{prefix}{name}_ewma"] = s.ewma
+                p50, p99 = s.percentile(50), s.percentile(99)
+                if p50 is not None:
+                    out[f"{prefix}{name}_p50"] = p50
+                    out[f"{prefix}{name}_p99"] = p99
+            for name, v in sorted(self._counters.items()):
+                out[f"{prefix}{name}_total"] = v
+            for name, v in sorted(self._gauges.items()):
+                out[f"{prefix}{name}"] = v
+        return out
+
+
+def prometheus_text(metrics: Dict[str, float]) -> str:
+    """Render a flat ``{metric_name: value}`` dict (labels already
+    embedded in names) as Prometheus text-exposition lines."""
+    lines = []
+    for name in sorted(metrics):
+        v = metrics[name]
+        lines.append(f"{name} {float(v):.9g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+# -- calibration ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepMeasurement:
+    """One calibration row: the cost-model inputs of a measured step.
+
+    ``flops``/``halo_bytes``/``halo_layers`` come from the bucket's
+    PlanFeatures, ``kind``/``batch``/``data_n``/``model_n`` describe
+    how it ran, ``seconds`` is the measured (blocked-until-ready) step
+    wall time."""
+
+    flops: float
+    halo_bytes: float
+    halo_layers: int
+    kind: str
+    batch: int
+    data_n: int
+    model_n: int
+    seconds: float
+
+
+def _design_row(m: StepMeasurement) -> List[float]:
+    """The analytic step cost is linear in
+    ``x = (1/peak_flops, 1/ici_bw, dispatch_overhead_s,
+    collective_overhead_s, halo_launch_s)``; this is one row of the
+    design matrix, mirroring runtime/planner.step_cost term for term."""
+    from repro.runtime.planner import PLAN_KINDS, _BANDED, padded_batch
+
+    if m.kind not in PLAN_KINDS:
+        raise ValueError(f"unknown plan kind {m.kind!r}")
+    dn = m.data_n if m.kind in ("data_parallel", "grid") else 1
+    mn = m.model_n if m.kind in _BANDED else 1
+    local_b = padded_batch(m.batch, dn) // dn
+    return [
+        m.flops * local_b / mn,                       # 1/peak_flops
+        m.halo_bytes * local_b if mn > 1 else 0.0,    # 1/ici_bw
+        1.0,                                          # dispatch_overhead_s
+        float((dn > 1) + (mn > 1)),                   # collective_overhead_s
+        float(m.halo_layers) if mn > 1 else 0.0,      # halo_launch_s
+    ]
+
+
+def fit_cost_params(measurements: Iterable[StepMeasurement], *,
+                    base: Optional[Any] = None):
+    """Least-squares fit of the CostParams constants from measured step
+    times.  Columns the sweep never exercised (e.g. no banded combos on
+    a unit mesh leave every halo entry zero) are unidentifiable and
+    keep ``base``'s value (default: the napkin CostParams()); fitted
+    rate constants are clamped positive so 1/x stays finite."""
+    import numpy as np
+
+    from repro.runtime.planner import CostParams
+
+    base = base if base is not None else CostParams()
+    measurements = list(measurements)      # may be a single-pass iterable
+    rows = [_design_row(m) for m in measurements]
+    if not rows:
+        return base
+    y = np.asarray([m.seconds for m in measurements], dtype=np.float64)
+    A = np.asarray(rows, dtype=np.float64)
+    identifiable = np.any(A != 0.0, axis=0)
+    x = np.zeros(A.shape[1])
+    if identifiable.any():
+        sol, *_ = np.linalg.lstsq(A[:, identifiable], y, rcond=None)
+        x[identifiable] = sol
+    base_x = np.asarray([
+        1.0 / base.peak_flops, 1.0 / base.ici_bw,
+        base.dispatch_overhead_s, base.collective_overhead_s,
+        base.halo_launch_s,
+    ])
+    # unidentifiable -> base; identifiable but non-positive (noise drove
+    # the fit through zero) -> base as well, never a negative rate
+    for i in range(5):
+        if not identifiable[i] or x[i] <= 0.0:
+            x[i] = base_x[i]
+    return CostParams(
+        peak_flops=float(1.0 / x[0]),
+        ici_bw=float(1.0 / x[1]),
+        dispatch_overhead_s=float(x[2]),
+        collective_overhead_s=float(x[3]),
+        halo_launch_s=float(x[4]),
+    )
+
+
+def cost_params_to_dict(params) -> Dict[str, float]:
+    return {k: float(v) for k, v in dataclasses.asdict(params).items()}
+
+
+def cost_params_from_dict(d: Dict[str, float]):
+    from repro.runtime.planner import CostParams
+
+    fields = {f.name for f in dataclasses.fields(CostParams)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(f"unknown CostParams fields {sorted(unknown)}")
+    return CostParams(**{k: float(v) for k, v in d.items()})
+
+
+def save_cost_params(params, path: str, *,
+                     measurements: Sequence[StepMeasurement] = (),
+                     meta: Optional[Dict[str, Any]] = None) -> None:
+    """Fitted params (+ provenance: the measurement rows and free-form
+    meta) to JSON; :func:`load_cost_params` round-trips exactly."""
+    doc = {
+        "cost_params": cost_params_to_dict(params),
+        "measurements": [dataclasses.asdict(m) for m in measurements],
+        "meta": dict(meta or {}),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_cost_params(path: str):
+    """CostParams back from a ``save_cost_params`` JSON file (also
+    accepts a bare ``{field: value}`` dict for hand-written files)."""
+    with open(path) as f:
+        doc = json.load(f)
+    d = doc.get("cost_params", doc) if isinstance(doc, dict) else doc
+    return cost_params_from_dict(d)

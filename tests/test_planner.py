@@ -174,14 +174,17 @@ class TestGoldenRouting:
     above survive many cost-model edits; this table does not — any
     change to CostParams defaults, the step-cost formula, or
     eligibility that silently flips a routing decision fails HERE with
-    the exact input named.  If a flip is intentional, regenerate the
-    changed rows (choose_kind with tall_features + TEST_PARAMS) and
-    update the table in the same commit that changes the model."""
+    the exact input named.  If a flip is intentional, run
+    ``python scripts/regen_golden_routing.py`` — it recomputes every
+    row (choose_kind with tall_features + TEST_PARAMS) and rewrites the
+    marked block below, so the golden updates in the same commit that
+    changes the model."""
 
     # (hw, batch, (data_n, model_n)) -> expected plan kind, generated
     # from choose_kind(tall_features(*hw), hw, batch, ...) at
     # TEST_PARAMS.  Rows group by mesh: unit mesh, data-only 4x1,
     # model-only 1x4, and the 2x4 grid mesh.
+    # GOLDEN-BEGIN (generated: scripts/regen_golden_routing.py)
     GOLDEN = {
         # unit mesh: nothing to shard over
         ((64, 64), 1, (1, 1)): "single_device",
@@ -226,6 +229,7 @@ class TestGoldenRouting:
         ((2048, 64), 1, (2, 4)): "row_band",
         ((2048, 64), 8, (2, 4)): "grid",
     }
+    # GOLDEN-END
 
     def test_golden_table(self):
         flips = []

@@ -1,0 +1,407 @@
+"""Telemetry/calibration layer tests (runtime/telemetry.py + the
+planner's MeasuredCost overlay) — fast tier.
+
+What the measured-cost loop guarantees, pinned here:
+
+  * CostBook mutations are lock-guarded read-modify-write — the PR 4
+    lost-update hammer pattern applied to the new store;
+  * with no measurements the planner routes EXACTLY like the analytic
+    model (the golden table in test_planner.py stays authoritative);
+    with a synthetic measurement set loaded, a pinned (bucket, batch)
+    decision provably flips — and flips ONLY past the observation
+    floor;
+  * the calibration fit is exact on noiselessly-generated measurements
+    (the step model is linear in the constants), and fit -> save ->
+    load round-trips to identical routing across the canonical grid.
+"""
+import json
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.planner import (
+    AnalyticCost,
+    CostParams,
+    MeasuredCost,
+    PlanFeatures,
+    Planner,
+    choose_kind,
+    eligible_kinds,
+    step_cost,
+)
+from repro.runtime.telemetry import (
+    CostBook,
+    StepMeasurement,
+    cost_params_from_dict,
+    cost_params_to_dict,
+    fit_cost_params,
+    load_cost_params,
+    prometheus_text,
+    save_cost_params,
+)
+
+# same crossover-friendly constants as test_planner.py
+TEST_PARAMS = CostParams(
+    peak_flops=5e9, ici_bw=1e9,
+    dispatch_overhead_s=50e-6, collective_overhead_s=20e-6,
+)
+
+
+def tall_features(h: int, w: int = 64) -> PlanFeatures:
+    return PlanFeatures(flops=2e5 * h * w / 64.0,
+                        halo_bytes=3e4 * w / 64.0,
+                        deepest_stride=32, halo_layers=20)
+
+
+class TestCostBook:
+    def test_warmup_skips_first_sample(self):
+        """The first engine call jit-compiles inside the call — a
+        multi-second one-off that must never reach the EWMA."""
+        book = CostBook()                      # warmup=1 default
+        book.record_step((64, 64), 1, "single_device", 5.0)  # compile
+        assert book.step_count((64, 64), 1, "single_device") == 0
+        book.record_step((64, 64), 1, "single_device", 0.01)
+        assert book.step_count((64, 64), 1, "single_device") == 1
+        assert book.step_ewma((64, 64), 1, "single_device") == 0.01
+
+    def test_step_series_stats(self):
+        book = CostBook(warmup=0, ewma_alpha=0.5)
+        for v in (0.010, 0.020, 0.030):
+            book.record_step((64, 64), 4, "grid", v)
+        assert book.step_count((64, 64), 4, "grid") == 3
+        # 0.5-EWMA: 0.010 -> 0.015 -> 0.0225
+        assert book.step_ewma((64, 64), 4, "grid") == \
+            pytest.approx(0.0225)
+        assert book.step_percentile((64, 64), 4, "grid", 50) == 0.020
+        assert book.step_percentile((64, 64), 4, "grid", 99) == 0.030
+        assert book.step_keys() == [((64, 64), 4, "grid")]
+        # stages are independent series
+        assert book.step_count((64, 64), 4, "grid",
+                               stage="dispatch") == 0
+
+    def test_named_series_counters_gauges(self):
+        book = CostBook(warmup=0)
+        book.observe("mb_dispatch_s", 0.5)
+        book.incr("mb_shed")
+        book.incr("mb_shed", 2)
+        book.set_gauge("pool_capacity", 7)
+        assert book.counter("mb_shed") == 3
+        assert book.gauge("pool_capacity") == 7.0
+        snap = book.snapshot()
+        assert snap["std_mb_shed_total"] == 3.0
+        assert snap["std_pool_capacity"] == 7.0
+        assert snap["std_mb_dispatch_s_count"] == 1.0
+        assert snap["std_mb_dispatch_s_ewma"] == 0.5
+
+    def test_snapshot_embeds_step_labels(self):
+        book = CostBook(warmup=0)
+        book.record_step((128, 64), 4, "row_band", 0.02)
+        snap = book.snapshot()
+        key = ('std_step_ewma_s{bucket="128x64",batch="4",'
+               'plan="row_band",stage="step"}')
+        assert snap[key] == 0.02
+
+    def test_prometheus_text_parses(self):
+        book = CostBook(warmup=0)
+        book.record_step((128, 64), 4, "row_band", 0.02)
+        book.incr("mb_shed")
+        txt = prometheus_text(book.snapshot())
+        assert txt.endswith("\n")
+        for line in txt.strip().splitlines():
+            name, value = line.rsplit(" ", 1)
+            float(value)                       # must parse
+            assert name and " " not in name.split("{")[0]
+
+
+class TestCostBookThreadSafety:
+    """The PR 4 lost-update pattern on the new store: every mutation is
+    read-modify-write, so the GIL alone would lose updates under thread
+    preemption.  Hammer every writer from many threads and assert the
+    counts are exact."""
+
+    N_THREADS = 16
+    PER_THREAD = 500
+
+    def test_concurrent_record_no_lost_updates(self):
+        book = CostBook(warmup=0)
+
+        def writer():
+            for _ in range(self.PER_THREAD):
+                book.record_step((64, 64), 1, "single_device", 0.001)
+                book.observe("mb_dispatch_s", 0.002)
+                book.incr("mb_shed")
+
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-5)
+        try:
+            ts = [threading.Thread(target=writer)
+                  for _ in range(self.N_THREADS)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        finally:
+            sys.setswitchinterval(old)
+        total = self.N_THREADS * self.PER_THREAD
+        assert book.step_count((64, 64), 1, "single_device") == total, \
+            "lost step records"
+        snap = book.snapshot()
+        assert snap["std_mb_dispatch_s_count"] == float(total), \
+            "lost series observations"
+        assert book.counter("mb_shed") == float(total), \
+            "lost counter increments"
+
+
+class TestMeasuredCostOverlay:
+    """The routing-flip acceptance: with no measurements the overlay IS
+    the analytic model; with the synthetic set loaded, the pinned
+    (64, 64) batch-1 decision on a 4x1 data mesh provably flips from
+    single_device (the golden-table analytic choice) to data_parallel
+    (the measured winner) — and only once past the observation floor."""
+
+    HW, BATCH = (64, 64), 1
+    MESH = dict(data_n=4, model_n=1)
+
+    def _provider(self, book, min_obs=3):
+        return MeasuredCost(book, fallback=AnalyticCost(TEST_PARAMS),
+                            min_observations=min_obs)
+
+    def test_no_measurements_reproduces_analytic_routing(self):
+        book = CostBook(warmup=0)
+        cost = self._provider(book)
+        f = tall_features(*self.HW)
+        for hw, batch, mesh in [
+            ((64, 64), 1, (4, 1)), ((64, 64), 8, (4, 1)),
+            ((256, 64), 1, (1, 4)), ((512, 64), 4, (2, 4)),
+        ]:
+            kw = dict(data_n=mesh[0], model_n=mesh[1])
+            assert choose_kind(tall_features(*hw), hw, batch,
+                               cost=cost, **kw) == \
+                choose_kind(tall_features(*hw), hw, batch,
+                            params=TEST_PARAMS, **kw)
+        # per-kind values match too, not just the argmin
+        assert cost.step_cost(f, self.HW, "single_device", self.BATCH,
+                              **self.MESH) == \
+            step_cost(f, "single_device", self.BATCH,
+                      params=TEST_PARAMS, **self.MESH)
+
+    def test_measured_flip_is_pinned_and_gated(self):
+        f = tall_features(*self.HW)
+        analytic = choose_kind(f, self.HW, self.BATCH,
+                               params=TEST_PARAMS, **self.MESH)
+        assert analytic == "single_device"     # the golden-table row
+
+        book = CostBook(warmup=0)
+        cost = self._provider(book, min_obs=3)
+        # measured reality disagrees with the napkin: the data-parallel
+        # engine is 10x faster at this exact combo
+        for _ in range(2):
+            book.record_step(self.HW, self.BATCH, "single_device", 0.010)
+            book.record_step(self.HW, self.BATCH, "data_parallel", 0.001)
+        # below the observation floor: still the analytic choice
+        assert choose_kind(f, self.HW, self.BATCH, cost=cost,
+                           **self.MESH) == "single_device"
+        book.record_step(self.HW, self.BATCH, "single_device", 0.010)
+        book.record_step(self.HW, self.BATCH, "data_parallel", 0.001)
+        # at the floor: the measured winner takes the route
+        assert choose_kind(f, self.HW, self.BATCH, cost=cost,
+                           **self.MESH) == "data_parallel"
+        # unmeasured combos at other buckets still route analytically
+        assert choose_kind(tall_features(2048), (2048, 64), 1,
+                           cost=cost, **self.MESH) == \
+            choose_kind(tall_features(2048), (2048, 64), 1,
+                        params=TEST_PARAMS, **self.MESH)
+
+    def test_min_observations_validated(self):
+        with pytest.raises(ValueError, match="min_observations"):
+            MeasuredCost(CostBook(), min_observations=0)
+
+
+class TestPlannerProviderSeam:
+    @pytest.fixture()
+    def unit_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+
+        return make_host_mesh((1, 1), ("data", "model"))
+
+    def test_params_and_cost_are_exclusive(self, unit_mesh):
+        with pytest.raises(ValueError, match="not both"):
+            Planner(unit_mesh, params=TEST_PARAMS,
+                    cost=AnalyticCost(TEST_PARAMS))
+        with pytest.raises(ValueError, match="not both"):
+            choose_kind(tall_features(64), (64, 64), 1, data_n=1,
+                        model_n=1, params=TEST_PARAMS,
+                        cost=AnalyticCost(TEST_PARAMS))
+
+    def test_params_property_sees_through_overlay(self, unit_mesh):
+        p = Planner(unit_mesh, params=TEST_PARAMS)
+        assert p.params is TEST_PARAMS
+        p.use_measurements(CostBook())
+        assert isinstance(p.cost, MeasuredCost)
+        assert p.params is TEST_PARAMS         # fallback chain exposed
+
+    def test_use_measurements_idempotent_per_book(self, unit_mesh):
+        p = Planner(unit_mesh)
+        book = CostBook()
+        p.use_measurements(book)
+        cost = p.cost
+        p.use_measurements(book)               # same book: no re-wrap
+        assert p.cost is cost
+        p.use_measurements(CostBook())         # new book: new overlay
+        assert p.cost is not cost
+
+    def test_planner_routes_by_measurements(self, unit_mesh):
+        """End to end through Planner.choose: a unit mesh only admits
+        single_device, so pin the measured value through costs()."""
+        book = CostBook(warmup=0)
+        p = Planner(unit_mesh, lambda hw: tall_features(*hw),
+                    params=TEST_PARAMS).use_measurements(book)
+        for _ in range(MeasuredCost.MIN_OBSERVATIONS):
+            book.record_step((64, 64), 1, "single_device", 0.123)
+        assert p.costs((64, 64), 1) == {"single_device": 0.123}
+
+
+class TestCalibrationFit:
+    """The fit is exact on noiseless data: the analytic step cost is
+    linear in the five constants, so measurements GENERATED from a
+    known CostParams must fit back to identical routing (and the
+    constants themselves, where identifiable)."""
+
+    TRUE = CostParams(peak_flops=4e9, ici_bw=2e9,
+                      dispatch_overhead_s=80e-6,
+                      collective_overhead_s=30e-6,
+                      halo_launch_s=3e-6)
+    GRID = [(hw, batch, mesh)
+            for hw in ((64, 64), (128, 128), (256, 64), (512, 64),
+                       (1024, 128), (2048, 64))
+            for batch in (1, 4, 8)
+            for mesh in ((1, 1), (4, 1), (1, 4), (2, 4))]
+
+    def _measurements(self):
+        rows = []
+        for hw, batch, (dn, mn) in self.GRID:
+            f = tall_features(*hw)
+            for kind in eligible_kinds(hw, data_n=dn, model_n=mn,
+                                       deepest_stride=f.deepest_stride):
+                rows.append(StepMeasurement(
+                    flops=f.flops, halo_bytes=f.halo_bytes,
+                    halo_layers=f.halo_layers, kind=kind, batch=batch,
+                    data_n=dn, model_n=mn,
+                    seconds=step_cost(f, kind, batch, data_n=dn,
+                                      model_n=mn, params=self.TRUE)))
+        return rows
+
+    def _routing(self, params):
+        out = {}
+        for hw, batch, (dn, mn) in self.GRID:
+            out[(hw, batch, dn, mn)] = choose_kind(
+                tall_features(*hw), hw, batch, data_n=dn, model_n=mn,
+                params=params)
+        return out
+
+    def test_fit_recovers_constants_and_routing(self):
+        fitted = fit_cost_params(self._measurements())
+        for name, want in cost_params_to_dict(self.TRUE).items():
+            assert getattr(fitted, name) == pytest.approx(want, rel=1e-6), \
+                name
+        assert self._routing(fitted) == self._routing(self.TRUE)
+
+    def test_fit_save_load_identical_routing(self, tmp_path):
+        """The acceptance round-trip: fit -> save -> load routes every
+        canonical (bucket, batch, mesh) input identically."""
+        fitted = fit_cost_params(self._measurements())
+        path = str(tmp_path / "cost_params.json")
+        save_cost_params(fitted, path, meta={"source": "test"})
+        loaded = load_cost_params(path)
+        assert loaded == fitted                # frozen dataclass eq
+        assert self._routing(loaded) == self._routing(fitted)
+        doc = json.loads(open(path).read())    # provenance round-trips
+        assert doc["meta"]["source"] == "test"
+        assert cost_params_from_dict(doc["cost_params"]) == fitted
+
+    def test_unidentifiable_columns_keep_base(self):
+        """A unit-mesh sweep never exercises halo/collective terms;
+        those constants must come back as the base napkin values, not
+        garbage from a singular solve."""
+        rows = [StepMeasurement(
+            flops=tall_features(h).flops, halo_bytes=0.0, halo_layers=0,
+            kind="single_device", batch=1, data_n=1, model_n=1,
+            seconds=step_cost(tall_features(h), "single_device", 1,
+                              params=self.TRUE))
+            for h in (64, 256, 1024)]
+        base = CostParams()
+        fitted = fit_cost_params(rows, base=base)
+        assert fitted.peak_flops == pytest.approx(self.TRUE.peak_flops,
+                                                  rel=1e-6)
+        assert fitted.dispatch_overhead_s == pytest.approx(
+            self.TRUE.dispatch_overhead_s, rel=1e-6)
+        assert fitted.ici_bw == base.ici_bw
+        assert fitted.collective_overhead_s == base.collective_overhead_s
+        assert fitted.halo_launch_s == base.halo_launch_s
+
+    def test_empty_measurements_return_base(self):
+        base = CostParams(peak_flops=1.0)
+        assert fit_cost_params([], base=base) is base
+
+    def test_unknown_kind_rejected(self):
+        bad = StepMeasurement(flops=1, halo_bytes=0, halo_layers=0,
+                              kind="pod", batch=1, data_n=1, model_n=1,
+                              seconds=1.0)
+        with pytest.raises(ValueError, match="unknown plan kind"):
+            fit_cost_params([bad])
+
+    def test_unknown_json_field_rejected(self, tmp_path):
+        path = tmp_path / "bad.json"
+        path.write_text(json.dumps({"cost_params": {"peak_flops": 1.0,
+                                                    "warp_drive": 9}}))
+        with pytest.raises(ValueError, match="warp_drive"):
+            load_cost_params(str(path))
+
+
+class TestServiceMetrics:
+    """The scrapeable export closing the ROADMAP autoscaling item:
+    engine step series, scheduler gauges, and plan choices all surface
+    through STDService.metrics_snapshot() / metrics_prometheus()."""
+
+    @pytest.fixture(scope="class")
+    def served(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.serve import STDService
+
+        svc = STDService(
+            width=0.125, buckets=(64,), max_batch=2,
+            planner=Planner(make_host_mesh((1, 1), ("data", "model"))))
+        img = np.random.default_rng(0).random(
+            (50, 48, 3)).astype(np.float32)
+        for _ in range(3):                     # past the warmup skip
+            svc(img)
+        svc.serve_batched([img] * 4)
+        return svc
+
+    def test_engine_and_service_step_series_recorded(self, served):
+        # sync path: 3 calls, first absorbs compile (warmup skip)
+        assert served.book.step_count((64, 64), 1, "single_device") >= 2
+        assert served.book.step_count((64, 64), 1, "single_device",
+                                      stage="dispatch") >= 2
+        assert served.book.step_ewma((64, 64), 1, "single_device") > 0
+
+    def test_metrics_snapshot_flat_and_complete(self, served):
+        m = served.metrics_snapshot()
+        assert m["std_requests_total"] >= 3.0
+        assert m["std_mb_submitted"] == 4.0
+        assert "std_mb_queue_depth" in m
+        assert "std_mb_batch_occupancy_ewma" in m
+        key = ('std_plan_choice{bucket="64x64",'
+               'plan="single_device"}')
+        assert m[key] == 1.0
+        step_keys = [k for k in m if k.startswith("std_step_ewma_s{")]
+        assert step_keys, "no measured step series exported"
+        assert all(isinstance(v, float) for v in m.values())
+
+    def test_metrics_prometheus_form(self, served):
+        txt = served.metrics_prometheus()
+        assert "std_requests_total" in txt
+        for line in txt.strip().splitlines():
+            float(line.rsplit(" ", 1)[1])
