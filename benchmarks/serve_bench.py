@@ -37,6 +37,17 @@ every eligible (bucket, plan, batch) combo with blocked steps, fit the
 ``--plan auto`` routes on measured constants instead of the v5e napkin
 defaults (the ROADMAP "calibrated cost model" loop).
 
+precision A/B (``--precision bfp``) — the numerics sweep: build one f32
+and one bfp service over the same buckets (PRNGKey(0) determinism means
+both run ONE underlying weight set — the bfp side through the paper's
+Fig. 4 normalization), time blocked steps per (bucket, batch) into each
+service's CostBook, and report per-bucket per-precision step walls plus
+the bfp/f32 speedup.  Every bucket must pass the accuracy-parity gate
+first (docs/serving.md "Precision modes"): bfp score/link maps stay
+within an eps accuracy budget of f32 AND the recovered boxes match
+exactly once pixels inside the eps margin of the 0.5 threshold are
+excluded — confident disagreements fail the run.
+
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
           --open-loop --rates 8 32 128 --inflight 1 2 4
@@ -47,6 +58,8 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
           --calibrate /tmp/cost.json --buckets 64 128 --max-batch 4
       PYTHONPATH=src python -m benchmarks.serve_bench --plan auto \
           --cost-params /tmp/cost.json
+      PYTHONPATH=src python -m benchmarks.serve_bench --precision bfp \
+          --buckets 64 --width 0.125 --max-batch 4
 """
 from __future__ import annotations
 
@@ -284,6 +297,127 @@ def run_calibration(out_path: str, *, width: float = 0.25,
                       f"plan={describe_plan(fit_planner.choose(hw, b))}")
         print(f"calibrate_saved,{out_path},rows={len(rows)}")
     return fitted
+
+
+PARITY_EPS = 0.05      # accuracy budget for the bfp-vs-f32 parity gate:
+                       # max |bfp - f32| over score/link probabilities,
+                       # and the 0.5-threshold margin inside which pixel
+                       # decisions are excluded from box comparison
+
+
+def precision_parity_gate(score_f, links_f, score_b, links_b, *,
+                          eps: float = PARITY_EPS,
+                          score_thr: float = 0.5, link_thr: float = 0.5):
+    """The bfp-vs-f32 accuracy-parity check, per batch of probability
+    maps (same weights, two numerics).  Two conditions:
+
+      1. ``0 < max|bfp - f32| < eps`` — the upper bound is the accuracy
+         budget; the LOWER bound proves the bfp side actually quantized
+         (a cross-precision engine-cache bug would produce exact zeros).
+      2. boxes under the 0.5-threshold guard: pixels whose f32
+         probability sits within ``eps`` of the threshold are excluded
+         (clamped to the f32 value — a near-threshold flip is noise, not
+         an accuracy loss); every remaining pixel decision, and so the
+         recovered boxes, must match EXACTLY.  A confident disagreement
+         (f32 says 0.9 text, bfp says 0.2) breaks the equality.
+
+    Returns ``(max_delta, boxes_equal)``.
+    """
+    import jax.numpy as jnp
+
+    from repro.models.fcn import postprocess as pp
+
+    d = max(float(jnp.max(jnp.abs(score_b - score_f))),
+            float(jnp.max(jnp.abs(links_b - links_f))))
+    sc = jnp.where(jnp.abs(score_f - score_thr) <= eps, score_f, score_b)
+    lc = jnp.where(jnp.abs(links_f - link_thr) <= eps, links_f, links_b)
+
+    def boxes(s, l):
+        return [
+            sorted(bx["box"] for bx in pp.boxes_from_labels(
+                np.asarray(pp.cc_label(s[i], l[i], score_thr, link_thr))))
+            for i in range(s.shape[0])
+        ]
+
+    return d, boxes(score_f, links_f) == boxes(sc, lc)
+
+
+def run_precision_ab(*, width: float = 0.25, buckets=(64, 128),
+                     max_batch: int = 8, steps: int = 3,
+                     eps: float = PARITY_EPS, seed: int = 0,
+                     verbose: bool = True):
+    """f32-vs-bfp A/B over the full bucket grid: per (bucket, batch)
+    blocked step walls from each service's CostBook (the per-precision
+    ``stage="step"`` series measured routing reads), gated by the
+    accuracy-parity check on every bucket.  Both services are seeded
+    identically, so the bfp side serves the SAME weights through the
+    paper's Fig. 4 normalization — the comparison is numerics-only."""
+    import jax.numpy as jnp
+
+    from repro.launch.serve import STDService
+    from repro.runtime.telemetry import CostBook
+
+    if steps < 1:
+        raise SystemExit("--calib-steps must be >= 1")
+    svcs = {
+        prec: STDService(width=width, buckets=tuple(buckets),
+                         max_batch=max_batch, engine_cache_capacity=0,
+                         book=CostBook(warmup=0), precision=prec)
+        for prec in ("f32", "bfp")
+    }
+    rng = np.random.default_rng(seed)
+    batch_points = sorted({1, max(1, max_batch // 2), max_batch})
+    out = {}
+    for bkt in buckets:
+        hw = (bkt, bkt)
+        # -- parity gate first: a bucket that fails accuracy must not
+        # report a speedup
+        x1 = rng.random((1, hw[0], hw[1], 3)).astype(np.float32)
+        maps = {}
+        for prec, svc in svcs.items():
+            model = svc.factory.model(hw, prec)
+            params = svc.factory.params(hw, prec)
+            o = model.apply(params, jnp.asarray(x1))
+            maps[prec] = (o["score"], o["links"])
+        d, boxes_equal = precision_parity_gate(
+            *maps["f32"], *maps["bfp"], eps=eps,
+            score_thr=svcs["f32"].factory.score_thr,
+            link_thr=svcs["f32"].factory.link_thr)
+        if verbose:
+            print(f"precision_parity,bucket={hw[0]}x{hw[1]},"
+                  f"max_delta={d:.4g},boxes_equal={boxes_equal}")
+        if not 0.0 < d < eps:
+            raise SystemExit(
+                f"precision parity FAILED at bucket {hw}: max bfp-f32 "
+                f"delta {d:.4g} outside (0, {eps}) — zero means the bfp "
+                f"engine never quantized (cross-precision cache hit?), "
+                f"past eps means the accuracy budget is blown"
+            )
+        if not boxes_equal:
+            raise SystemExit(
+                f"precision parity FAILED at bucket {hw}: boxes diverge "
+                f"beyond the {eps}-margin 0.5-threshold guard"
+            )
+        # -- timed A/B: blocked steps into each service's book
+        for b in batch_points:
+            x = rng.random((b, hw[0], hw[1], 3)).astype(np.float32)
+            vhws = [(hw[0], hw[1])] * b
+            row = {}
+            for prec, svc in svcs.items():
+                svc.infer_labels(x, vhws)          # compile + warm
+                for _ in range(steps):
+                    svc.infer_labels(x, vhws)
+                row[prec] = svc.book.step_percentile(
+                    hw, b, "single_device", 50, precision=prec)
+            row["speedup"] = (row["f32"] / row["bfp"]
+                              if row["bfp"] else float("nan"))
+            out[(hw, b)] = dict(row, max_delta=d)
+            if verbose:
+                print(f"precision_ab,bucket={hw[0]}x{hw[1]},batch={b},"
+                      f"f32 p50 {row['f32'] * 1e3:.2f} ms,"
+                      f"bfp p50 {row['bfp'] * 1e3:.2f} ms,"
+                      f"speedup x{row['speedup']:.2f}")
+    return out
 
 
 def bench_serving(requests: int = 32, width: float = 0.25,
@@ -535,7 +669,19 @@ def main(argv=None):
                          "file; the planner (--plan auto and the "
                          "serve_plan report) routes on them instead of "
                          "the napkin defaults")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bfp"],
+                    help="'bfp' runs the precision A/B sweep ONLY: "
+                         "f32-vs-bfp blocked step walls per (bucket, "
+                         "batch) from the CostBook, gated by the "
+                         "accuracy-parity check on every bucket")
     args = ap.parse_args(argv)
+    if args.precision == "bfp":
+        return run_precision_ab(width=args.width,
+                                buckets=tuple(args.buckets),
+                                max_batch=args.max_batch,
+                                steps=args.calib_steps,
+                                seed=args.seed)
     if args.calibrate:
         run_calibration(args.calibrate, width=args.width,
                         buckets=tuple(args.buckets),

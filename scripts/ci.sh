@@ -62,6 +62,16 @@ print(f"calibrate smoke OK: {len(doc['measurements'])} rows, "
       f"{len(grid)} routes identical after reload")
 PYEOF
 
+echo "== tier-2: precision modes — bfp-vs-f32 box parity + engine-state regressions =="
+# The bfp-vs-f32 accuracy-parity smoke (0.5-threshold guard on the
+# bucket grid), the per-precision engine LRU keying, the concurrent
+# transposed-tracing regression, and the in-call BFP weight
+# quantization regression all live in test_precision.py; the kernel
+# interpret-default regressions ride along.  These also run in the fast
+# tiers — this stage keeps them failing loudly when CI is invoked with
+# path args that skip the fast tiers.
+python -m pytest -q tests/test_precision.py
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override

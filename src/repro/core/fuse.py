@@ -19,6 +19,16 @@
    9 taps per 4 outputs versus 36 for the naive version — exactly the
    paper's 75% reduction.  ``upsample2x_conv3x3_fused`` is bit-identical
    to the naive zero-insert+conv (test-verified).
+
+3. Conv epilogue fusion (paper Fig. 5): the microcode's per-layer ReLU
+   flag is a datapath epilogue, not a separate pass — a conv+bias+ReLU
+   sequence is one launch.  :func:`can_fuse_conv_epilogue` is the
+   trace-time eligibility rule the interpreter consults (the residual
+   cache/add register reads the PRE-activation value, so a word that
+   caches or adds must keep its ReLU after the residual op), and
+   :func:`conv_epilogue` is the jnp epilogue for non-Pallas conv paths;
+   the Pallas Winograd kernel applies the same epilogue inside its
+   output-transform flush (kernels/winograd_conv).
 """
 from __future__ import annotations
 
@@ -48,6 +58,32 @@ def fold_batchnorm(
     b0 = jnp.zeros_like(beta) if b is None else b
     b_f = (b0 - mean) * s + beta
     return w_f, b_f
+
+
+# ---------------------------------------------------------------------------
+# Conv epilogue fusion (bias + ReLU into the conv launch)
+# ---------------------------------------------------------------------------
+
+def can_fuse_conv_epilogue(mc) -> bool:
+    """Whether a conv microcode word's ReLU may fuse into the conv
+    launch.  The residual register reads the pre-activation value
+    (res=cache stores it, res=add sums before the activation), so only
+    words without a residual op are eligible."""
+    from .microcode import ResOp
+
+    return bool(mc.relu) and mc.res_op == ResOp.NONE
+
+
+def conv_epilogue(y: jax.Array, b: jax.Array | None = None,
+                  relu: bool = False) -> jax.Array:
+    """The fused conv tail for non-Pallas paths: bias add + optional
+    ReLU in one jnp expression (XLA fuses it into the conv's consumer);
+    the Pallas Winograd kernel applies the identical epilogue in-kernel."""
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jax.nn.relu(y)
+    return y
 
 
 # ---------------------------------------------------------------------------

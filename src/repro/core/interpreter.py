@@ -125,13 +125,45 @@ class FCNEngine:
         return out
 
     # -- datapath units -------------------------------------------------------
-    def _conv(self, x, p, mc: Microcode, spec):
+    def _conv(self, x, p, mc: Microcode, spec, *, transposed: bool = False,
+              relu: bool = False):
+        """One conv microcode word.  ``transposed`` rides in as an
+        explicit argument — never instance state, so concurrent traces
+        of one cached engine (transposed vs not, PR 4's async dispatch)
+        each bake their own kernel orientation.  ``relu=True`` fuses the
+        word's activation into this launch (fuse.can_fuse_conv_epilogue
+        decides eligibility at the call site)."""
         w = p["w"]
-        if getattr(self, "_transposed", False):
+        b = p.get("b")
+        if transposed:
             # transposed-image mode: transpose the weight kernels (paper:
             # "transposing the corresponding weight kernels and modifying
             # the convolution mode")
             w = jnp.swapaxes(w, 0, 1)
+        depthwise = bool(spec.table and spec.table.get("depthwise"))
+        if (
+            self.bfp is not None
+            and self.use_pallas
+            and self.mode == "optimized"
+            and not depthwise
+            and mc.kernel_size == 1
+            and mc.stride_n == 1
+        ):
+            # a 1x1 conv IS a matmul: run the BFP Pallas kernel, which
+            # quantizes both operands along the contraction dim itself
+            # (activations axis=-1, weights axis=Cin — the same blocking
+            # as the roundtrip below, so numerics match)
+            from repro.kernels.bfp_matmul import ops as bops
+
+            n, hh, ww, cin = x.shape
+            y = bops.bfp_matmul(
+                x.astype(jnp.float32).reshape(-1, cin),
+                w.astype(jnp.float32).reshape(cin, -1),
+                block_size=self.bfp.block_size,
+                mantissa_bits=self.bfp.mantissa_bits,
+                rounding=self.bfp.rounding,
+            ).reshape(n, hh, ww, -1)
+            return fuse.conv_epilogue(y, b, relu)
         if self.bfp is not None:
             x = bfp_lib.roundtrip(
                 x.astype(jnp.float32),
@@ -140,20 +172,27 @@ class FCNEngine:
                 axis=-1,
                 rounding=self.bfp.rounding,
             )
-            # weights already normalized offline if normalize_weights() was
-            # used; quantizing again is idempotent for trunc rounding.
+            # weights quantize in-call too (paper Fig. 4's normalization
+            # branch must hold whether or not the caller ran
+            # normalize_weights() offline — trunc rounding is idempotent,
+            # so pre-normalized weights pass through unchanged)
+            w = bfp_lib.roundtrip(
+                w.astype(jnp.float32),
+                block_size=self.bfp.block_size,
+                mantissa_bits=self.bfp.mantissa_bits,
+                axis=-2,                       # block along Cin (K dim)
+                rounding=self.bfp.rounding,
+            )
         x = x.astype(jnp.float32)
         w = w.astype(jnp.float32)
-        if spec.table and spec.table.get("depthwise"):
+        if depthwise:
             y = lax.conv_general_dilated(
                 x, w, (mc.stride_n, mc.stride_n), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 feature_group_count=mc.in_ch,
                 preferred_element_type=jnp.float32,
             )
-            if "b" in p:
-                y = y + p["b"]
-            return y
+            return fuse.conv_epilogue(y, b, relu)
         if (
             self.mode == "optimized"
             and mc.kernel_size == 3
@@ -162,18 +201,17 @@ class FCNEngine:
             if self.use_pallas:
                 from repro.kernels.winograd_conv import ops as wops
 
-                y = wops.winograd_conv2d(x, w)
-            else:
-                y = winograd.winograd_conv2d(x, w, padding="SAME")
+                # bias + ReLU fused into the kernel's output-transform
+                # flush: one launch for the whole microcode sequence
+                return wops.winograd_conv2d(x, w, b, relu=relu)
+            y = winograd.winograd_conv2d(x, w, padding="SAME")
         else:
             y = lax.conv_general_dilated(
                 x, w, (mc.stride_n, mc.stride_n), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 preferred_element_type=jnp.float32,
             )
-        if "b" in p:
-            y = y + p["b"]
-        return y
+        return fuse.conv_epilogue(y, b, relu)
 
     @staticmethod
     def _pool(x, mc: Microcode, spec):
@@ -252,7 +290,6 @@ class FCNEngine:
             raise ValueError(
                 f"input {x.shape} != program plane {(h0, w0, c0)}"
             )
-        self._transposed = transposed
         arena: Dict[int, jax.Array] = {prog.input_addr: x}
         extents: Dict[int, int] = {
             prog.input_addr: h0 * w0 * c0 * STORAGE_BYTES
@@ -284,10 +321,18 @@ class FCNEngine:
             name = prog.weight_bindings.get(idx)
             p = params.get(name, {}) if name else {}
             lt = LayerType(mc.layer_type)
+            fused_relu = False
             if lt == LayerType.CONV:
+                # conv+bias+ReLU fuse into one launch (optimized mode,
+                # fuse.py eligibility: the residual register reads the
+                # pre-activation value, so res words keep a separate ReLU)
+                fused_relu = (self.mode == "optimized"
+                              and fuse.can_fuse_conv_epilogue(mc))
                 y = self._spatial_banded(
                     band_ctx, xin, mc.kernel_size, mc.stride_n,
-                    lambda xb: self._conv(xb, p, mc, spec),
+                    lambda xb: self._conv(xb, p, mc, spec,
+                                          transposed=transposed,
+                                          relu=fused_relu),
                 )
             elif lt == LayerType.POOL:
                 y = self._spatial_banded(
@@ -319,7 +364,7 @@ class FCNEngine:
             elif mc.res_op == ResOp.ADD:
                 assert cache is not None, "res add with empty cache register"
                 y = y + cache
-            if mc.relu:
+            if mc.relu and not fused_relu:
                 y = jax.nn.relu(y)
             # write back to the data pool in storage precision (FP16 in the
             # paper; f32 for the reference numerics)

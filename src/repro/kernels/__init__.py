@@ -11,4 +11,24 @@ Each package ships three layers:
                     output transform fused in-kernel
   flash_attention/  blockwise online-softmax GQA attention (prefill path)
   ssd_scan/         Mamba2 state-space-dual intra-chunk quadratic kernel
+
+Every public op takes ``interpret`` (default ``None`` = derive from the
+backend via :func:`default_interpret`): the kernel bodies target the TPU
+Mosaic compiler (``pltpu.VMEM`` scratch, MXU dot shapes), so everywhere
+else they execute through the Pallas interpreter — which makes opting
+into the kernels (``use_pallas=True``) safe on any backend, just not
+fast off-TPU.
 """
+from __future__ import annotations
+
+
+def default_interpret() -> bool:
+    """Whether Pallas calls should run interpreted on this backend.
+
+    The kernels here compile with the TPU Mosaic backend only; on cpu/gpu
+    the interpreter is the working path.  Resolved at trace time so the
+    decision follows the backend the enclosing jit actually lowers for.
+    """
+    import jax
+
+    return jax.default_backend() != "tpu"

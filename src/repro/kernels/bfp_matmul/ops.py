@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bfp as bfp_lib
+from repro.kernels import default_interpret
 
 from .kernel import bfp_matmul_quantized
 
@@ -51,9 +52,13 @@ def bfp_matmul(
     bm: int = 256,
     bn: int = 256,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """C = A @ B through shared-exponent BFP (A:(M,K), B:(K,N))."""
+    """C = A @ B through shared-exponent BFP (A:(M,K), B:(K,N)).
+    ``interpret=None`` derives from the backend (compiled on TPU,
+    interpreted elsewhere — see repro.kernels.default_interpret)."""
+    if interpret is None:
+        interpret = default_interpret()
     M, K = a.shape
     _, N = b.shape
     qa = bfp_lib.quantize(

@@ -8,6 +8,12 @@ output transform AᵀYA in-kernel*.  Fusing the output transform matters on
 TPU: the intermediate M tensor is 36/16 = 2.25x the output size, so
 writing it to HBM would more than double the kernel's write traffic.
 
+The conv's bias add and ReLU ride the same flush (paper Fig. 5: the
+microcode's per-layer ReLU flag drives a datapath epilogue, not a
+separate pass) — one launch covers contraction, output transform, bias,
+and activation, so the optimized engine issues a single dispatch per
+fused conv+bias+ReLU microcode word.
+
 Grid: (P/bp, Cout/bn, Cin/bk) with Cin innermost; the (36, bp, bn) f32
 accumulator lives in VMEM scratch across the Cin sweep.
 
@@ -29,10 +35,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.winograd import AT
+from repro.kernels import default_interpret
 
 
-def _winograd_mm_kernel(at_ref, v_ref, u_ref, o_ref, acc_ref):
-    """at: (4, 6) Aᵀ; v: (bp, 36, bk); u: (36, bk, bn); o: (bp, 16, bn)."""
+def _winograd_mm_kernel(at_ref, v_ref, u_ref, b_ref, o_ref, acc_ref, *,
+                        relu: bool):
+    """at: (4, 6) Aᵀ; v: (bp, 36, bk); u: (36, bk, bn); b: (1, bn);
+    o: (bp, 16, bn)."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -57,22 +66,33 @@ def _winograd_mm_kernel(at_ref, v_ref, u_ref, o_ref, acc_ref):
         m = acc.reshape(6, 6, bp, bn)
         # Y = Aᵀ M A over the two 6-axes (VPU work, fused with the flush)
         y = jnp.einsum("ij,jkpn,lk->ilpn", at, m, at)    # (4, 4, bp, bn)
-        o_ref[...] = y.reshape(16, bp, bn).transpose(1, 0, 2)
+        y = y.reshape(16, bp, bn).transpose(1, 0, 2)
+        y = y + b_ref[...][None]          # (bp, 16, bn) + (1, 1, bn)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bp", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bp", "bn", "bk", "relu", "interpret")
 )
 def winograd_tile_matmul(
     v: jax.Array,          # (P, 36, Cin)  transformed input tiles
     u: jax.Array,          # (36, Cin, Cout) transformed weights (G W Gᵀ)
+    b: jax.Array | None = None,            # (Cout,) fused bias
     *,
     bp: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = False,
+    relu: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (P, 16, Cout) output tiles (4x4 row-major per tile)."""
+    """Returns (P, 16, Cout) output tiles (4x4 row-major per tile), with
+    the bias add and optional ReLU fused into the output-transform flush
+    (``interpret=None`` derives from the backend — see
+    repro.kernels.default_interpret)."""
+    if interpret is None:
+        interpret = default_interpret()
     P, t36, K = v.shape
     _, _, N = u.shape
     assert t36 == 36
@@ -80,16 +100,19 @@ def winograd_tile_matmul(
     bn = min(bn, N)
     bk = min(bk, K)
     assert P % bp == 0 and N % bn == 0 and K % bk == 0, (P, N, K, bp, bn, bk)
+    bias = (jnp.zeros((1, N), jnp.float32) if b is None
+            else b.astype(jnp.float32).reshape(1, N))
     return pl.pallas_call(
-        _winograd_mm_kernel,
+        functools.partial(_winograd_mm_kernel, relu=relu),
         grid=(P // bp, N // bn, K // bk),
         in_specs=[
             pl.BlockSpec((4, 6), lambda i, j, k: (0, 0)),
             pl.BlockSpec((bp, 36, bk), lambda i, j, k: (i, 0, k)),
             pl.BlockSpec((36, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bp, 16, bn), lambda i, j, k: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((P, 16, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((36, bp, bn), jnp.float32)],
         interpret=interpret,
-    )(jnp.asarray(AT, jnp.float32), v, u)
+    )(jnp.asarray(AT, jnp.float32), v, u, bias)

@@ -1,5 +1,5 @@
 """Public Winograd conv op: XLA-side tiling/input transform + Pallas MXU
-contraction with fused output transform."""
+contraction with fused output transform + bias/ReLU epilogue."""
 from __future__ import annotations
 
 import functools
@@ -23,7 +23,7 @@ def _pad_axis(x, mult, axis):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("padding", "bp", "bn", "bk", "interpret"),
+    static_argnames=("padding", "bp", "bn", "bk", "relu", "interpret"),
 )
 def winograd_conv2d(
     x: jax.Array,              # (N, H, W, Cin) NHWC
@@ -34,8 +34,15 @@ def winograd_conv2d(
     bp: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    relu: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """F(4x4,3x3) convolution with the bias add and optional ReLU fused
+    into the kernel's output-transform flush — one launch per conv+bias+
+    ReLU microcode sequence.  ``interpret=None`` derives from the backend
+    (compiled on TPU, interpreted elsewhere — see
+    repro.kernels.default_interpret); pass an explicit bool to override.
+    """
     n, h, wd, cin = x.shape
     kh, kw, cin2, cout = w.shape
     assert (kh, kw) == (3, 3) and cin2 == cin
@@ -70,14 +77,14 @@ def winograd_conv2d(
     bk_ = min(bk, cin)
     vp = _pad_axis(_pad_axis(v, bp_, 0), bk_, 2)
     up = _pad_axis(_pad_axis(u, bk_, 1), bn_, 2)
+    bias = None if b is None else _pad_axis(b.astype(jnp.float32), bn_, 0)
     y = winograd_tile_matmul(
-        vp, up, bp=bp_, bn=bn_, bk=bk_, interpret=interpret
+        vp, up, bias, bp=bp_, bn=bn_, bk=bk_, relu=relu,
+        interpret=interpret,
     )[:P, :, :cout]                               # (P, 16, Cout)
 
     y = y.reshape(n, th, tw, wg.TILE_OUT, wg.TILE_OUT, cout)
     y = y.transpose(0, 1, 3, 2, 4, 5).reshape(
         n, th * wg.TILE_OUT, tw * wg.TILE_OUT, cout
     )[:, :out_h, :out_w, :]
-    if b is not None:
-        y = y + b
     return y

@@ -50,6 +50,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,6 +60,7 @@ from repro.runtime.executor import (
     ExecutionPlan,
     SingleDevice,
     band_height_unit,
+    check_precision,
     describe_plan,
     plan_batch_multiple,
     plan_kind,
@@ -110,11 +112,13 @@ class STDService:
                  max_pending: int = 0, admission: str = "block",
                  inflight: int = 1,
                  book: Optional[CostBook] = None,
-                 measured_routing: bool = True):
+                 measured_routing: bool = True,
+                 precision: str = "f32"):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        self.precision = check_precision(precision)
         self.plan: ExecutionPlan = plan if plan is not None else SingleDevice()
         self.planner = planner
         m = plan_batch_multiple(self.plan)
@@ -151,11 +155,26 @@ class STDService:
         # completion path), scheduler stage timings/gauges
         # (MicroBatcher) — metrics_snapshot() exports it all
         self.book = book if book is not None else CostBook()
-        self.factory = EngineFactory(
-            lambda hw: PixelLinkModel(STDConfig(
+
+        def make_model(hw, precision="f32"):
+            # "bfp" runs the paper's quantized datapath: BFP convs with
+            # FP16 data-pool storage, Pallas kernels where the backend
+            # compiles them (interpret-mode Pallas off the TPU would be
+            # orders of magnitude slower than XLA, so it stays off in
+            # serving — the kernels themselves are covered by tests)
+            from repro.core import BFPConfig
+
+            bfp = precision == "bfp"
+            return PixelLinkModel(STDConfig(
                 backbone="vgg16", width=width, image_size=hw,
-                merge_ch=(16, 16, 8), mode=mode, storage_fp16=False,
-            )),
+                merge_ch=(16, 16, 8), mode=mode,
+                bfp=BFPConfig() if bfp else None,
+                storage_fp16=bfp,
+                use_pallas=bfp and jax.default_backend() in ("gpu", "tpu"),
+            ))
+
+        self.factory = EngineFactory(
+            make_model,
             score_thr=score_thr, link_thr=link_thr,
             capacity=engine_cache_capacity,
             book=self.book,
@@ -165,8 +184,10 @@ class STDService:
             if measured_routing:
                 # overlay measured step EWMAs over the analytic model:
                 # combos the service has actually run route by what they
-                # actually cost, through the same engine LRU
-                planner.use_measurements(self.book)
+                # actually cost, through the same engine LRU — reading
+                # this service's precision's step series
+                planner.use_measurements(self.book,
+                                         precision=self.precision)
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
                                       "transposed": 0, "plan_choices": {}}
 
@@ -178,7 +199,7 @@ class STDService:
     def _plan_features(self, hw: Tuple[int, int]):
         """Cost-model features for one bucket, from the same assembled
         program the engine will run (planner wiring)."""
-        model = self.factory.model(tuple(hw))
+        model = self.factory.model(tuple(hw), self.precision)
         return features_for_program(
             model.program, self.factory.deepest_stride(tuple(hw))
         )
@@ -266,8 +287,8 @@ class STDService:
         valid_q = np.zeros((b, 2), np.int32)
         for i, (vh, vw) in enumerate(valid_hws):
             valid_q[i] = (vh // 4, vw // 4)
-        fn = self.factory.plan_fn(hw, b, plan)
-        params = self.factory.params(hw)
+        fn = self.factory.plan_fn(hw, b, plan, self.precision)
+        params = self.factory.params(hw, self.precision)
         t0 = time.perf_counter()
         pending = fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
         return pending, (hw, b, plan_kind(plan), t0)
@@ -282,7 +303,8 @@ class STDService:
         comparisons stay fair, but measured-vs-analytic ones are biased
         under load (see "Calibrated routing" in docs/plans.md)."""
         hw, b, kind, t0 = meta
-        self.book.record_step(hw, b, kind, time.perf_counter() - t0)
+        self.book.record_step(hw, b, kind, time.perf_counter() - t0,
+                              precision=self.precision)
 
     def dispatch_labels(self, stack: np.ndarray,
                         valid_hws: List[Tuple[int, int]]):
@@ -487,12 +509,14 @@ def main(argv=None):
                     help="also run the micro-batched scheduler path")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--precision", default="f32", choices=["f32", "bfp"])
     args = ap.parse_args(argv)
 
     from repro.data.images import RequestStream
 
     svc = STDService(width=args.width, mode=args.mode,
-                     max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+                     max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                     precision=args.precision)
     images = RequestStream(
         args.requests, seed=0, hw_range=((48, 120), (48, 120))
     ).images()

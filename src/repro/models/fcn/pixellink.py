@@ -35,6 +35,8 @@ class STDConfig:
     mode: str = "optimized"                      # reference|optimized
     bfp: Optional[BFPConfig] = None
     storage_fp16: bool = True                    # paper's data-pool format
+    use_pallas: bool = False                     # Pallas kernels in the
+                                                 # optimized datapath
 
 
 class PixelLinkModel:
@@ -54,6 +56,7 @@ class PixelLinkModel:
             mode=cfg.mode,
             bfp=cfg.bfp,
             storage_dtype=jnp.float16 if cfg.storage_fp16 else jnp.float32,
+            use_pallas=cfg.use_pallas,
         )
 
     def init_params(self, key):

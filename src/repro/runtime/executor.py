@@ -46,8 +46,16 @@ async dispatch) only has to add plan types:
     around whichever plan is active.
 
 Plans are frozen, hashable dataclasses: the serving engine LRU keys on
-``(bucket_hw, batch, plan)`` and a mesh change is a new compiled engine,
-never silent reuse.
+``(bucket_hw, batch, plan, precision)`` and a mesh or precision change
+is a new compiled engine, never silent reuse.  ``precision`` is the
+paper's numerics axis (docs/plans.md "Precision modes"): ``"f32"`` runs
+plain float convs, ``"bfp"`` runs BFP-quantized convs with FP16
+data-pool storage and the Pallas kernels where the backend compiles
+them — the factory's ``make_model(hw, precision)`` builds the matching
+model, and the bfp parameter cache holds the f32 parameters run through
+the paper's Fig. 4 normalization (BN fold + BFP weight roundtrip), so
+both precisions share one underlying weight set and accuracy-parity
+gates compare like with like.
 
 Compiled engines are ASYNC: calling one returns un-materialized device
 arrays (JAX async dispatch), so the serving dispatch stage can submit
@@ -59,6 +67,7 @@ to XLA (:func:`_donate_argnums`).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 import time
 from typing import Any, Callable, Dict, Tuple, Union
@@ -114,6 +123,18 @@ class GridPlan:
 
 
 ExecutionPlan = Union[SingleDevice, DataParallel, RowBand, GridPlan]
+
+#: execution precisions the engine LRU keys on: plain float vs the
+#: paper's BFP-quantized datapath with FP16 data-pool storage
+PRECISIONS = ("f32", "bfp")
+
+
+def check_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision
 
 
 class _BandCtx:
@@ -202,14 +223,25 @@ def describe_plan(plan: ExecutionPlan) -> str:
 
 
 class EngineFactory:
-    """Compiles (bucket_hw, batch, plan) -> engine callable, with the
-    model/param caches and the compiled-engine LRU behind one lock.
+    """Compiles (bucket_hw, batch, plan, precision) -> engine callable,
+    with the model/param caches and the compiled-engine LRU behind one
+    lock.
 
-    ``make_model(hw)`` builds the STD model for one input plane (its
-    parameters must be plane-invariant — fully convolutional — so one
-    per-bucket param set serves every band plane derived from it).  The
-    compiled callable is ``fn(params, x, valid_q) -> labels``: FCN
-    forward, per-image valid-region masking, batched CC labeling.
+    ``make_model(hw, precision)`` builds the STD model for one input
+    plane at one execution precision (its parameters must be
+    plane-invariant — fully convolutional — so one per-bucket param set
+    serves every band plane derived from it).  Legacy single-argument
+    ``make_model(hw)`` callables still work but pin the factory to
+    ``"f32"``.  The compiled callable is ``fn(params, x, valid_q) ->
+    labels``: FCN forward, per-image valid-region masking, batched CC
+    labeling.
+
+    Parameters are per-precision without being independent: the f32
+    cache holds the deterministic PRNGKey(0) initialization, and the
+    bfp cache holds those SAME parameters run through the paper's
+    Fig. 4 normalization (BN fold + BFP weight roundtrip via the bfp
+    model's ``normalize_weights``) — so f32-vs-bfp accuracy parity
+    compares one weight set under two numerics, never two inits.
 
     With a telemetry ``book`` (runtime/telemetry.CostBook) every
     compiled engine is wrapped once, at compile time, to record its
@@ -224,7 +256,7 @@ class EngineFactory:
 
     def __init__(
         self,
-        make_model: Callable[[Tuple[int, int]], Any],
+        make_model: Callable[..., Any],
         *,
         score_thr: float = 0.5,
         link_thr: float = 0.5,
@@ -232,6 +264,18 @@ class EngineFactory:
         book: Any = None,
     ):
         self.make_model = make_model
+        # legacy make_model(hw) callables take one parameter; the
+        # precision-aware form takes (hw, precision).  Unintrospectable
+        # callables are treated as precision-aware (they can ignore it).
+        try:
+            n_params = len([
+                p for p in inspect.signature(make_model).parameters.values()
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+                or p.kind == p.VAR_POSITIONAL
+            ])
+        except (TypeError, ValueError):
+            n_params = 2
+        self._legacy_make_model = n_params < 2
         self.score_thr = score_thr
         self.link_thr = link_thr
         self.book = book
@@ -244,25 +288,45 @@ class EngineFactory:
         self._lock = threading.Lock()
         self.stats: Dict[str, Any] = {"compiled": []}
 
+    def _build_model(self, hw: Tuple[int, int], precision: str):
+        if self._legacy_make_model:
+            if precision != "f32":
+                raise ValueError(
+                    f"make_model {self.make_model!r} takes only (hw); a "
+                    f"precision-aware factory needs make_model(hw, "
+                    f"precision) to build {precision!r} engines"
+                )
+            return self.make_model(hw)
+        return self.make_model(hw, precision)
+
     # -- model / param caches --------------------------------------------------
-    def model(self, hw: Tuple[int, int]):
+    def model(self, hw: Tuple[int, int], precision: str = "f32"):
         hw = tuple(hw)
+        check_precision(precision)
         with self._lock:
-            m = self._models.get(hw)
+            m = self._models.get((hw, precision))
             if m is None:
-                m = self.make_model(hw)
-                self._models.put(hw, m)
+                m = self._build_model(hw, precision)
+                self._models.put((hw, precision), m)
             return m
 
-    def params(self, hw: Tuple[int, int]):
+    def params(self, hw: Tuple[int, int], precision: str = "f32"):
         """Parameters for one plane — deterministic (PRNGKey(0)), so an
-        LRU-evicted entry rebuilds identically."""
-        model = self.model(tuple(hw))
+        LRU-evicted entry rebuilds identically.  The bfp entry is the
+        f32 entry run through the bfp model's ``normalize_weights``
+        (paper Fig. 4: BN fold + BFP weight normalization) — one weight
+        set under both numerics."""
+        hw = tuple(hw)
+        check_precision(precision)
+        model = self.model(hw, precision)
+        raw = self.params(hw, "f32") if precision != "f32" else None
         with self._lock:
-            p = self._params.get(tuple(hw))
+            p = self._params.get((hw, precision))
             if p is None:
-                p = model.init_params(jax.random.PRNGKey(0))
-                self._params.put(tuple(hw), p)
+                p = (model.init_params(jax.random.PRNGKey(0))
+                     if precision == "f32"
+                     else model.normalize_weights(raw))
+                self._params.put((hw, precision), p)
             return p
 
     def deepest_stride(self, hw: Tuple[int, int]) -> int:
@@ -273,23 +337,28 @@ class EngineFactory:
 
     # -- engines ---------------------------------------------------------------
     def plan_fn(self, hw: Tuple[int, int], batch: int,
-                plan: ExecutionPlan) -> Callable:
-        """The compiled engine for one (bucket, batch, plan) key."""
-        key = (tuple(hw), int(batch), plan)
+                plan: ExecutionPlan, precision: str = "f32") -> Callable:
+        """The compiled engine for one (bucket, batch, plan, precision)
+        key — a precision change is a different engine, never a cache
+        hit on the other numerics."""
+        check_precision(precision)
+        key = (tuple(hw), int(batch), plan, precision)
         fn = self._engines.get(key)
         if fn is not None:
             return fn
-        fn = self._compile(tuple(hw), int(batch), plan)
+        fn = self._compile(tuple(hw), int(batch), plan, precision)
         if self.book is not None:
-            fn = self._timed(fn, tuple(hw), int(batch), plan_kind(plan))
+            fn = self._timed(fn, tuple(hw), int(batch), plan_kind(plan),
+                             precision)
         self.stats["compiled"].append(
             {"hw": tuple(hw), "batch": int(batch),
-             "plan": describe_plan(plan)}
+             "plan": describe_plan(plan), "precision": precision}
         )
         self._engines.put(key, fn)
         return fn
 
-    def _timed(self, fn: Callable, hw, batch: int, kind: str) -> Callable:
+    def _timed(self, fn: Callable, hw, batch: int, kind: str,
+               precision: str = "f32") -> Callable:
         """Record each engine call's wall into the telemetry book.
         This measures the DISPATCH side only — engines return pending
         arrays, so blocking here would serialize the async pipeline."""
@@ -298,7 +367,7 @@ class EngineFactory:
             out = fn(params, x, valid_q)
             self.book.record_step(hw, batch, kind,
                                   time.perf_counter() - t0,
-                                  stage="dispatch")
+                                  stage="dispatch", precision=precision)
             return out
 
         return timed
@@ -315,19 +384,19 @@ class EngineFactory:
             score, links, self.score_thr, self.link_thr, valid_mask=mask
         )
 
-    def _compile(self, hw, batch, plan) -> Callable:
+    def _compile(self, hw, batch, plan, precision: str = "f32") -> Callable:
         if isinstance(plan, SingleDevice):
-            return self._compile_single(hw)
+            return self._compile_single(hw, precision)
         if isinstance(plan, DataParallel):
-            return self._compile_data_parallel(hw, batch, plan)
+            return self._compile_data_parallel(hw, batch, plan, precision)
         if isinstance(plan, RowBand):
-            return self._compile_row_band(hw, plan)
+            return self._compile_row_band(hw, plan, precision)
         if isinstance(plan, GridPlan):
-            return self._compile_grid(hw, batch, plan)
+            return self._compile_grid(hw, batch, plan, precision)
         raise TypeError(f"unknown execution plan {plan!r}")
 
-    def _compile_single(self, hw) -> Callable:
-        model = self.model(hw)
+    def _compile_single(self, hw, precision: str = "f32") -> Callable:
+        model = self.model(hw, precision)
 
         def run(params, x, valid_q):
             out = model.apply(params, x)
@@ -335,7 +404,8 @@ class EngineFactory:
 
         return jax.jit(run, donate_argnums=_donate_argnums())
 
-    def _compile_data_parallel(self, hw, batch, plan) -> Callable:
+    def _compile_data_parallel(self, hw, batch, plan,
+                               precision: str = "f32") -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
         if n is None:
             raise ValueError(
@@ -346,7 +416,7 @@ class EngineFactory:
                 f"batch {batch} not divisible by {plan.axis}={n}; round "
                 f"with plan_batch_multiple()"
             )
-        model = self.model(hw)
+        model = self.model(hw, precision)
         specs = fcn_activation_specs(batch_axis=plan.axis)
 
         def shard(params, x, valid_q):
@@ -359,7 +429,7 @@ class EngineFactory:
             out_specs=specs["labels"],
         ), donate_argnums=_donate_argnums())
 
-    def _compile_row_band(self, hw, plan) -> Callable:
+    def _compile_row_band(self, hw, plan, precision: str = "f32") -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
         if n is None:
             raise ValueError(
@@ -370,10 +440,11 @@ class EngineFactory:
             raise ValueError(
                 f"bands={plan.bands} must equal mesh axis {plan.axis}={n}"
             )
-        return self._compile_banded(plan.mesh, hw, bands, plan.axis)
+        return self._compile_banded(plan.mesh, hw, bands, plan.axis,
+                                    precision=precision)
 
     def _compile_banded(self, mesh, hw, bands: int, model_axis: str,
-                        batch_axis=None) -> Callable:
+                        batch_axis=None, precision: str = "f32") -> Callable:
         """The shared row-banded engine: each device runs the SAME
         program assembled at the band plane, and every spatial layer
         halo-exchanges its own boundary rows along ``model_axis``
@@ -382,10 +453,10 @@ class EngineFactory:
         halo exchange still moves along ``model_axis`` only."""
         W = hw[1]
         band_h = self._band_height(hw, bands)
-        model = self.model(hw)
+        model = self.model(hw, precision)
         band_model = (model.for_plane((band_h, W))
                       if hasattr(model, "for_plane")
-                      else self.make_model((band_h, W)))
+                      else self._build_model((band_h, W), precision))
         ctx = _BandCtx(model_axis, bands)
         specs = fcn_activation_specs(
             batch_axis=batch_axis, rows_axis=model_axis
@@ -424,7 +495,8 @@ class EngineFactory:
             )
         return band_h
 
-    def _compile_grid(self, hw, batch, plan: GridPlan) -> Callable:
+    def _compile_grid(self, hw, batch, plan: GridPlan,
+                      precision: str = "f32") -> Callable:
         """DataParallel x RowBand composed in one shard_map: batch over
         ``data_axis``, rows over ``model_axis``, per-layer halo exchange
         along ``model_axis`` only."""
@@ -453,7 +525,7 @@ class EngineFactory:
             )
         return self._compile_banded(
             plan.mesh, hw, bands, plan.model_axis,
-            batch_axis=plan.data_axis,
+            batch_axis=plan.data_axis, precision=precision,
         )
 
     # -- introspection ---------------------------------------------------------

@@ -176,7 +176,7 @@ class MeasuredCost:
 
     def __init__(self, book, fallback: Optional[CostProvider] = None, *,
                  min_observations: int = MIN_OBSERVATIONS,
-                 stage: str = "step"):
+                 stage: str = "step", precision: str = "f32"):
         if min_observations < 1:
             raise ValueError("min_observations must be >= 1")
         self.book = book
@@ -184,14 +184,19 @@ class MeasuredCost:
             fallback if fallback is not None else AnalyticCost())
         self.min_observations = min_observations
         self.stage = stage
+        # which numerics' walls this overlay reads — a bfp service must
+        # route on bfp step times, never the f32 series
+        self.precision = precision
 
     def step_cost(self, features: PlanFeatures, hw: Tuple[int, int],
                   kind: str, batch: int, *, data_n: int,
                   model_n: int) -> float:
-        if self.book.step_count(hw, batch, kind,
-                                stage=self.stage) >= self.min_observations:
+        if self.book.step_count(
+                hw, batch, kind, stage=self.stage,
+                precision=self.precision) >= self.min_observations:
             measured = self.book.step_ewma(hw, batch, kind,
-                                           stage=self.stage)
+                                           stage=self.stage,
+                                           precision=self.precision)
             if measured is not None:
                 return measured
         return self.fallback.step_cost(features, hw, kind, batch,
@@ -297,15 +302,20 @@ class Planner:
 
     def use_measurements(self, book, *,
                          min_observations: int =
-                         MeasuredCost.MIN_OBSERVATIONS) -> "Planner":
+                         MeasuredCost.MIN_OBSERVATIONS,
+                         precision: str = "f32") -> "Planner":
         """Overlay a telemetry CostBook over the current provider:
         combos with >= min_observations measured steps route by their
         EWMA wall time, the rest keep the current (analytic) costs.
-        Idempotent per book — re-wiring the same book is a no-op."""
-        if isinstance(self.cost, MeasuredCost) and self.cost.book is book:
+        ``precision`` selects which numerics' step series the overlay
+        reads (a bfp service routes on bfp walls).  Idempotent per
+        (book, precision) — re-wiring the same pair is a no-op."""
+        if (isinstance(self.cost, MeasuredCost) and self.cost.book is book
+                and self.cost.precision == precision):
             return self
         self.cost = MeasuredCost(book, fallback=self.cost,
-                                 min_observations=min_observations)
+                                 min_observations=min_observations,
+                                 precision=precision)
         return self
 
     def bind_features(

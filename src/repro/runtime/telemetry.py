@@ -11,7 +11,10 @@ half of that loop:
     ``(bucket_hw, batch, plan_kind)`` (plus a ``stage`` dimension:
     ``"dispatch"`` = the engine-call wall recorded by
     runtime/executor.EngineFactory, ``"step"`` = dispatch through
-    materialization recorded by launch/serve.STDService); scheduler
+    materialization recorded by launch/serve.STDService — and a
+    ``precision`` dimension, ``"f32"``/``"bfp"``, so per-precision
+    walls never mix and a measured-cost planner can route each bucket
+    to its faster numerics); scheduler
     stage timings / queue gauges / shed counters from
     launch/batching.MicroBatcher land as named series in the same book.
     Every series keeps a count, an EWMA, and a bounded window of recent
@@ -105,8 +108,9 @@ class CostBook:
         # ``warmup`` samples per (combo, stage)
         self.warmup = warmup
         self._lock = threading.Lock()
-        self._steps: Dict[Tuple[StepKey, str], _Series] = {}
-        self._warm: Dict[Tuple[StepKey, str], int] = {}
+        # step series key: (StepKey, stage, precision)
+        self._steps: Dict[Tuple[StepKey, str, str], _Series] = {}
+        self._warm: Dict[Tuple[StepKey, str, str], int] = {}
         self._series: Dict[str, _Series] = {}
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
@@ -117,13 +121,16 @@ class CostBook:
 
     # -- writers ---------------------------------------------------------------
     def record_step(self, hw: Tuple[int, int], batch: int, kind: str,
-                    seconds: float, *, stage: str = "step") -> None:
+                    seconds: float, *, stage: str = "step",
+                    precision: str = "f32") -> None:
         """One engine step's wall time for a (bucket, batch, plan_kind)
         combo.  ``stage="dispatch"`` is the non-blocking engine-call
         wall (executor); ``stage="step"`` is dispatch through
         materialization (the routing-relevant one — MeasuredCost reads
-        it)."""
-        key = (self._step_key(hw, batch, kind), stage)
+        it).  ``precision`` keeps f32 and bfp walls in separate series
+        (per-precision engines compile separately and run different
+        kernels)."""
+        key = (self._step_key(hw, batch, kind), stage, str(precision))
         with self._lock:
             warm = self._warm.get(key, 0)
             if warm < self.warmup:
@@ -153,30 +160,35 @@ class CostBook:
             self._gauges[name] = float(value)
 
     # -- readers ---------------------------------------------------------------
-    def step_count(self, hw, batch, kind, *, stage: str = "step") -> int:
-        key = (self._step_key(hw, batch, kind), stage)
+    def step_count(self, hw, batch, kind, *, stage: str = "step",
+                   precision: str = "f32") -> int:
+        key = (self._step_key(hw, batch, kind), stage, str(precision))
         with self._lock:
             s = self._steps.get(key)
             return s.count if s is not None else 0
 
-    def step_ewma(self, hw, batch, kind, *,
-                  stage: str = "step") -> Optional[float]:
-        key = (self._step_key(hw, batch, kind), stage)
+    def step_ewma(self, hw, batch, kind, *, stage: str = "step",
+                  precision: str = "f32") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage, str(precision))
         with self._lock:
             s = self._steps.get(key)
             return s.ewma if s is not None else None
 
     def step_percentile(self, hw, batch, kind, q: float, *,
-                        stage: str = "step") -> Optional[float]:
-        key = (self._step_key(hw, batch, kind), stage)
+                        stage: str = "step",
+                        precision: str = "f32") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage, str(precision))
         with self._lock:
             s = self._steps.get(key)
             return s.percentile(q) if s is not None else None
 
-    def step_keys(self, *, stage: str = "step") -> List[StepKey]:
-        """Every (hw, batch, kind) combo with at least one sample."""
+    def step_keys(self, *, stage: str = "step",
+                  precision: str = "f32") -> List[StepKey]:
+        """Every (hw, batch, kind) combo with at least one sample at
+        this (stage, precision)."""
         with self._lock:
-            return sorted(k for k, st in self._steps if st == stage)
+            return sorted(k for k, st, pr in self._steps
+                          if st == stage and pr == precision)
 
     def counter(self, name: str) -> float:
         with self._lock:
@@ -194,10 +206,14 @@ class CostBook:
         stage="step"}``."""
         out: Dict[str, float] = {}
         with self._lock:
-            for ((hw, batch, kind), stage), s in sorted(
+            for ((hw, batch, kind), stage, precision), s in sorted(
                     self._steps.items()):
+                # f32 keeps the historical label shape; other precisions
+                # append their own label so scrapers can tell them apart
+                prec = ("" if precision == "f32"
+                        else f',precision="{precision}"')
                 lbl = (f'{{bucket="{hw[0]}x{hw[1]}",batch="{batch}",'
-                       f'plan="{kind}",stage="{stage}"}}')
+                       f'plan="{kind}",stage="{stage}"{prec}}}')
                 out[f"{prefix}step_count{lbl}"] = float(s.count)
                 if s.ewma is not None:
                     out[f"{prefix}step_ewma_s{lbl}"] = s.ewma

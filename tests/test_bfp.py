@@ -79,6 +79,28 @@ class TestAlgorithm1:
         rel = jnp.abs(x - y) / jnp.maximum(jnp.abs(x), 1e-6)
         assert float(jnp.median(rel)) < 1e-2
 
+    def test_remainder_block_error_bounded(self):
+        """A trailing 8-wide remainder block (40 = 32 + 8) gets its OWN
+        shared exponent: its error must obey the same block-ulp bound as
+        full blocks, and a large magnitude in the full block must not
+        leak into the remainder block's scaling."""
+        mb = 10
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 40))
+        # blow up one element of the FULL block only
+        x = x.at[:, 0].set(1000.0)
+        y = bfp.roundtrip(x, block_size=32, mantissa_bits=mb)
+        assert y.shape == x.shape
+        # remainder block [32:40] scales to its own max, not the 1000
+        rem = x[:, 32:]
+        ulp = jnp.max(jnp.abs(rem), axis=1, keepdims=True) * 2.0 ** (
+            1 - mb)
+        assert bool(jnp.all(jnp.abs(rem - y[:, 32:]) <= ulp))
+        # idempotence holds across the remainder block too (the
+        # property the interpreter's in-call weight quantization needs)
+        np.testing.assert_array_equal(
+            np.asarray(bfp.roundtrip(y, block_size=32, mantissa_bits=mb)),
+            np.asarray(y))
+
     def test_nbytes_model(self):
         t = bfp.quantize(jnp.ones((128, 256)), block_size=32,
                          mantissa_bits=7)

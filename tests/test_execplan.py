@@ -39,8 +39,10 @@ class TestPlanKeyedLRU:
     def _stub_factory(self, capacity):
         from repro.runtime.executor import EngineFactory
 
-        fac = EngineFactory(lambda hw: None, capacity=capacity)
-        fac._compile = lambda hw, batch, plan: ("engine", hw, batch, plan)
+        fac = EngineFactory(lambda hw, precision="f32": None,
+                            capacity=capacity)
+        fac._compile = (lambda hw, batch, plan, precision="f32":
+                        ("engine", hw, batch, plan, precision))
         return fac
 
     def test_keyed_on_bucket_batch_plan(self, unit_mesh):
@@ -52,6 +54,8 @@ class TestPlanKeyedLRU:
         # every key component is part of the identity
         assert fac.plan_fn((64, 128), 2, SingleDevice()) is not single
         assert fac.plan_fn((64, 64), 4, SingleDevice()) is not single
+        assert fac.plan_fn((64, 64), 2, SingleDevice(),
+                           "bfp") is not single
         dp = fac.plan_fn((64, 64), 2, DataParallel(unit_mesh, "data"))
         rb = fac.plan_fn((64, 64), 2, RowBand(unit_mesh, axis="model"))
         assert dp is not single and rb is not single and dp is not rb
@@ -60,8 +64,8 @@ class TestPlanKeyedLRU:
         gr = fac.plan_fn((64, 64), 2, GridPlan(unit_mesh))
         assert gr not in (single, dp, rb)
         assert fac.plan_fn((64, 64), 2, GridPlan(unit_mesh)) is gr  # hit
-        assert len(fac) == 6
-        assert fac.engines.hits == 2 and fac.engines.misses == 6
+        assert len(fac) == 7
+        assert fac.engines.hits == 2 and fac.engines.misses == 7
 
     def test_eviction_at_capacity(self, unit_mesh):
         from repro.runtime.executor import DataParallel, SingleDevice

@@ -70,6 +70,63 @@ class TestWinogradKernel:
         got = winograd_conv2d(x, w, b, interpret=True)
         np.testing.assert_allclose(got, direct_conv2d(x, w) + b, atol=2e-3)
 
+    def test_bias_relu_fusion(self):
+        """The full in-kernel epilogue (bias + ReLU inside the output
+        transform flush) against the unfused reference."""
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, 7, 5))
+        w = jax.random.normal(jax.random.PRNGKey(4), (3, 3, 5, 6))
+        b = jax.random.normal(jax.random.PRNGKey(5), (6,))
+        got = winograd_conv2d(x, w, b, relu=True, interpret=True)
+        want = jnp.maximum(direct_conv2d(x, w) + b, 0.0)
+        np.testing.assert_allclose(got, want, atol=2e-3)
+        assert float(jnp.min(got)) >= 0.0
+
+    def test_relu_without_bias(self):
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        x = jax.random.normal(jax.random.PRNGKey(6), (1, 8, 8, 4))
+        w = jax.random.normal(jax.random.PRNGKey(7), (3, 3, 4, 4))
+        got = winograd_conv2d(x, w, relu=True, interpret=True)
+        np.testing.assert_allclose(
+            got, jnp.maximum(direct_conv2d(x, w), 0.0), atol=2e-3)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(0, 1000),
+        # non-multiple-of-4 H/W so the output crop and tile padding both
+        # bite; includes H or W below one 4x4 tile after VALID shrink
+        st.sampled_from([(6, 9, 3, 5), (7, 7, 2, 3), (13, 5, 4, 4),
+                         (5, 17, 1, 2)]),
+    )
+    def test_valid_padding_vs_direct(self, seed, hwcc):
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        h, w, cin, cout = hwcc
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (2, h, w, cin))
+        ker = jax.random.normal(k2, (3, 3, cin, cout))
+        got = winograd_conv2d(x, ker, padding="VALID", interpret=True)
+        want = direct_conv2d(x, ker, padding="VALID")
+        assert got.shape == want.shape == (2, h - 2, w - 2, cout)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_channels_below_block_sizes(self):
+        """Cin/Cout far below the bn/bk tile sizes: the _pad_axis and
+        bp_=min(bp, P) clamp paths must still produce the exact conv."""
+        from repro.kernels.winograd_conv import winograd_conv2d
+        from repro.kernels.winograd_conv.ref import direct_conv2d
+
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 6, 6, 2))
+        w = jax.random.normal(jax.random.PRNGKey(9), (3, 3, 2, 3))
+        got = winograd_conv2d(x, w, bp=128, bn=128, bk=128,
+                              interpret=True)
+        np.testing.assert_allclose(got, direct_conv2d(x, w), atol=2e-3)
+
 
 class TestFlashAttentionKernel:
     @settings(max_examples=8, deadline=None)
