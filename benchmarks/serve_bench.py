@@ -48,6 +48,14 @@ within an eps accuracy budget of f32 AND the recovered boxes match
 exactly once pixels inside the eps margin of the 0.5 threshold are
 excluded — confident disagreements fail the run.
 
+postprocess A/B (``--postprocess device``) — the serving-tail sweep:
+serve one seeded request stream through a host-postprocess and a
+device-postprocess service (identical weights and routing), gate on
+EXACT box parity for every request and bucket, and report per-mode
+complete-stage busy time, total ``stage="postprocess"`` walls, TPS, and
+p50/p99 — the run fails unless the device path measurably reduces the
+postprocess wall (docs/serving.md "Postprocess pipeline").
+
 Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
       PYTHONPATH=src python -m benchmarks.serve_bench --requests 64 \
           --open-loop --rates 8 32 128 --inflight 1 2 4
@@ -420,6 +428,126 @@ def run_precision_ab(*, width: float = 0.25, buckets=(64, 128),
     return out
 
 
+def run_postprocess_ab(*, requests: int = 48, width: float = 0.25,
+                       buckets=(64, 128), max_batch: int = 8,
+                       max_wait_ms: float = 8.0, seed: int = 0,
+                       boxes_capacity: int = 256, pre_workers: int = 4,
+                       steps: int = 3, verbose: bool = True):
+    """Host-vs-device postprocess A/B on ONE seeded request stream.
+
+    Both services share weights (PRNGKey(0) determinism) and routing;
+    only the serving tail differs — full label-plane D2H + host box
+    extraction vs compact on-device rows + trivial decode.  The gate is
+    EXACT box parity on every request, reported per bucket; the
+    measurement is each mode's ``stage="postprocess"`` wall over a
+    BLOCKED single-threaded pass (``steps`` repeats per request — the
+    serving-concurrent walls also land in each book, but post workers
+    contend for the GIL with dispatch/completion there, so the blocked
+    pass is what the reduction gate reads, the same pattern as the
+    precision A/B's blocked steps).  Completion-stage busy time, TPS,
+    and p50/p99 from the concurrent serving pass are reported alongside.
+    Fails unless boxes match everywhere AND the device path's blocked
+    postprocess wall is below the host's (the tail reduction this mode
+    exists for)."""
+    from repro.data.images import RequestStream
+    from repro.launch.serve import STDService, bucket_hw
+    from repro.runtime.telemetry import CostBook
+
+    if requests < 1:
+        raise SystemExit("--requests must be >= 1")
+    images = RequestStream(
+        requests, seed=seed,
+        hw_range=((48, max(buckets)), (48, max(buckets))),
+    ).images()
+    svcs, results = {}, {}
+    for mode in ("host", "device"):
+        svc = STDService(width=width, buckets=tuple(buckets),
+                         max_batch=max_batch, max_wait_ms=max_wait_ms,
+                         engine_cache_capacity=0, inflight=1,
+                         book=CostBook(warmup=0), postprocess=mode,
+                         boxes_capacity=boxes_capacity)
+        svc.serve_batched(images, pre_workers=pre_workers)   # warm/compile
+        results[mode] = svc.serve_batched(images,
+                                          pre_workers=pre_workers)
+        svcs[mode] = svc
+
+    # -- exact-parity gate, reported per bucket ----------------------------
+    per_bucket: dict = {}
+    for i, img in enumerate(images):
+        bkt = bucket_hw(img.shape[0], img.shape[1], tuple(buckets))
+        ok = ([b["box"] for b in results["host"][i]]
+              == [b["box"] for b in results["device"][i]])
+        n_ok, n_all = per_bucket.get(bkt, (0, 0))
+        per_bucket[bkt] = (n_ok + ok, n_all + 1)
+    for bkt, (n_ok, n_all) in sorted(per_bucket.items()):
+        if verbose:
+            print(f"postprocess_parity,bucket={bkt[0]}x{bkt[1]},"
+                  f"boxes_equal={n_ok}/{n_all}")
+        if n_ok != n_all:
+            raise SystemExit(
+                f"postprocess parity FAILED at bucket {bkt}: "
+                f"{n_all - n_ok}/{n_all} requests' device boxes diverge "
+                f"from the host path"
+            )
+
+    # -- blocked postprocess measurement (single-threaded, the gate) -------
+    def pp_wall_sum(svc):
+        return sum(
+            svc.book.step_total(hw, b, kind, stage="postprocess")
+            for (hw, b, kind) in svc.book.step_keys(stage="postprocess")
+        )
+
+    blocked = {}
+    for mode, svc in svcs.items():
+        before = pp_wall_sum(svc)
+        for img in images:
+            x, valid, tr = svc.preprocess(img)
+            payload = svc._finalize(svc._dispatch(x[None], [valid]))[0]
+            for _ in range(max(steps, 1)):
+                svc.postprocess(payload, valid, tr,
+                                bucket_hw=tuple(x.shape[:2]))
+        blocked[mode] = pp_wall_sum(svc) - before
+
+    # -- busy-time / throughput report -------------------------------------
+    out = {}
+    for mode, svc in svcs.items():
+        mb = svc.stats["batching"]
+        lat = svc.stats["batched_latency_s"]
+        out[mode] = {
+            "tps": svc.stats["batched_tps"],
+            "p50_ms": _pctl(lat, 50),
+            "p99_ms": _pctl(lat, 99),
+            "complete_busy_s": mb["complete_busy_s"],
+            "post_busy_s": mb["post_busy_s"],
+            "postprocess_wall_s": blocked[mode],
+            "overflows": svc.stats["pp_overflow"],
+            "nonconverged": svc.stats["nonconverged"],
+        }
+        if verbose:
+            r = out[mode]
+            print(f"postprocess_ab,mode={mode},"
+                  f"tps {r['tps']:.2f},"
+                  f"p50 {r['p50_ms']:.1f} ms,p99 {r['p99_ms']:.1f} ms,"
+                  f"complete_busy {r['complete_busy_s'] * 1e3:.1f} ms,"
+                  f"pp_wall {r['postprocess_wall_s'] * 1e3:.1f} ms,"
+                  f"overflows {r['overflows']}")
+    host_w, dev_w = (out["host"]["postprocess_wall_s"],
+                     out["device"]["postprocess_wall_s"])
+    if verbose:
+        red = 1.0 - dev_w / host_w if host_w > 0 else float("nan")
+        dc = (out["host"]["complete_busy_s"]
+              - out["device"]["complete_busy_s"])
+        print(f"postprocess_ab,pp_wall_reduction {red * 100:.1f}%,"
+              f"complete_busy_delta {dc * 1e3:+.1f} ms")
+    if not dev_w < host_w:
+        raise SystemExit(
+            f"postprocess A/B FAILED: device pp wall {dev_w * 1e3:.2f} ms "
+            f"not below host {host_w * 1e3:.2f} ms — the compact tail "
+            f"should always beat full-plane host extraction"
+        )
+    return out
+
+
 def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
@@ -675,7 +803,26 @@ def main(argv=None):
                          "f32-vs-bfp blocked step walls per (bucket, "
                          "batch) from the CostBook, gated by the "
                          "accuracy-parity check on every bucket")
+    ap.add_argument("--postprocess", default="host",
+                    choices=["host", "device"],
+                    help="'device' runs the postprocess A/B sweep ONLY: "
+                         "host vs device serving tail on one stream, "
+                         "gated on exact box parity per bucket and on a "
+                         "measured postprocess-wall reduction")
+    ap.add_argument("--boxes-capacity", type=int, default=256,
+                    help="device-postprocess compact-rows capacity "
+                         "(components past it fall back to the host "
+                         "path per image)")
     args = ap.parse_args(argv)
+    if args.postprocess == "device":
+        return run_postprocess_ab(requests=args.requests,
+                                  width=args.width,
+                                  buckets=tuple(args.buckets),
+                                  max_batch=args.max_batch,
+                                  max_wait_ms=args.max_wait_ms,
+                                  seed=args.seed,
+                                  boxes_capacity=args.boxes_capacity,
+                                  pre_workers=args.pre_workers)
     if args.precision == "bfp":
         return run_precision_ab(width=args.width,
                                 buckets=tuple(args.buckets),

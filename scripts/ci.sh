@@ -72,6 +72,17 @@ echo "== tier-2: precision modes — bfp-vs-f32 box parity + engine-state regres
 # path args that skip the fast tiers.
 python -m pytest -q tests/test_precision.py
 
+echo "== tier-2: device postprocess — parity suite + serve_bench A/B smoke =="
+# The postprocess parity suite (log-hop + Pallas CCL vs the union-find
+# oracle, device-vs-host box extraction, serpentine worst case, service
+# wiring) plus a tiny serve_bench --postprocess device run proving the
+# exact-box-parity gate passes and the device tail measurably reduces
+# the blocked stage="postprocess" wall.  The suite also runs in the
+# fast tiers; this stage keeps it failing loudly under path args.
+python -m pytest -q tests/test_postprocess_device.py
+python -m benchmarks.serve_bench --postprocess device \
+  --width 0.125 --buckets 64 --max-batch 2 --requests 8
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override

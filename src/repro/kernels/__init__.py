@@ -11,6 +11,8 @@ Each package ships three layers:
                     output transform fused in-kernel
   flash_attention/  blockwise online-softmax GQA attention (prefill path)
   ssd_scan/         Mamba2 state-space-dual intra-chunk quadratic kernel
+  cc_label/         paper §III.A — PixelLink CC labeling, tile-local
+                    VMEM convergence + global log-hop merge rounds
 
 Every public op takes ``interpret`` (default ``None`` = derive from the
 backend via :func:`default_interpret`): the kernel bodies target the TPU

@@ -1,0 +1,15 @@
+"""Pallas connected-component labeling (paper §III.A PixelLink tail).
+
+``cc_label_pallas`` (ops.py) runs the label propagation in two phases:
+a Pallas kernel iterates block-locally in VMEM until every tile reaches
+its local fixpoint (kernel.py), then global log-hop merge rounds
+(one-hop spread + pointer jumping, shared with
+``repro.models.fcn.postprocess``) stitch tiles together — cutting the
+HBM round-trips per iteration from O(diameter) full-plane sweeps to one
+kernel launch plus O(log diameter)-ish merge rounds.  ref.py is the
+pure-jnp oracle (the postprocess log-hop path itself).
+"""
+from repro.kernels.cc_label.ops import cc_label_pallas
+from repro.kernels.cc_label.ref import cc_label_ref
+
+__all__ = ["cc_label_pallas", "cc_label_ref"]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Pallas CCL op: the postprocess log-hop path
+itself, with the same calling convention as ``cc_label_pallas``."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.fcn import postprocess as pp
+
+
+def cc_label_ref(
+    score: jax.Array,
+    links: jax.Array,
+    score_thr: float = 0.5,
+    link_thr: float = 0.5,
+    max_iters: int = 256,
+    valid_mask: Optional[jax.Array] = None,
+    *,
+    return_stats: bool = False,
+):
+    """Reference labels for :func:`repro.kernels.cc_label.cc_label_pallas`
+    — ``cc_label_batched(hop="log")`` with 2-D inputs promoted."""
+    unbatched = score.ndim == 2
+    if unbatched:
+        score = score[None]
+        links = links[None]
+        if valid_mask is not None:
+            valid_mask = valid_mask[None]
+    out = pp.cc_label_batched(
+        score, links, score_thr, link_thr, max_iters,
+        valid_mask=valid_mask, hop="log", return_stats=return_stats,
+    )
+    if not unbatched:
+        return out
+    if return_stats:
+        labels, iters, converged = out
+        return labels[0], iters[0], converged[0]
+    return out[0]

@@ -275,6 +275,7 @@ class MicroBatcher:
             "inflight_peak": 0,       # max dispatched-but-unfinalized
             "dispatch_busy_s": 0.0,   # real time inside infer_fn
             "complete_busy_s": 0.0,   # real time inside finalize_fn
+            "post_busy_s": 0.0,       # real time inside post_fn (all workers)
             "stage_occupancy": {},    # busy/wall per stage, set by stop()
         }
 
@@ -332,6 +333,11 @@ class MicroBatcher:
                              if self._wall_s > 0 else 0.0),
                 "complete": (self.stats["complete_busy_s"] / self._wall_s
                              if self._wall_s > 0 else 0.0),
+                # the post pool runs post_workers threads, so its busy
+                # time is normalized per worker to stay a [0, 1] occupancy
+                "post": (self.stats["post_busy_s"]
+                         / (self._wall_s * max(self.post_workers, 1))
+                         if self._wall_s > 0 else 0.0),
             }
         self._running = False
 
@@ -521,10 +527,14 @@ class MicroBatcher:
                 self._post_pool.submit(self._post_one, it, out)
 
     def _post_one(self, item: _Item, out: Any):
+        t0 = time.perf_counter()
         try:
             self._resolve(item, self.post_fn(item.payload, out))
         except Exception as e:
             item.future.set_exception(e)
+        finally:
+            with self._stats_lock:
+                self.stats["post_busy_s"] += time.perf_counter() - t0
 
     def _resolve(self, item: _Item, result: Any):
         # sample lands BEFORE set_result, so anything observable through

@@ -30,6 +30,15 @@ paper's throughput tricks:
     FLOPs + halo bytes + batch-split occupancy — heterogeneous buckets
     in one service then route to different plans through the same
     engine LRU,
+  * device-side postprocess (``postprocess="device"``): the CC tail
+    already runs on device; this mode also compacts each label map into
+    a fixed-capacity ``(capacity + 1, 6)`` boxes tensor on device
+    (EngineFactory.boxes_fn), so the completion stage materializes a
+    few hundred bytes per image instead of the full plane and the host
+    tail is a trivial O(capacity) decode — per-image walls land in the
+    CostBook under ``stage="postprocess"`` for both modes, and images
+    whose component count overflows the capacity fall back to the host
+    path (counted, never wrong),
   * measured-cost telemetry: every layer writes into one
     runtime/telemetry.CostBook (engine dispatch walls, full
     dispatch-through-D2H step walls, scheduler stage timings and queue
@@ -113,11 +122,23 @@ class STDService:
                  inflight: int = 1,
                  book: Optional[CostBook] = None,
                  measured_routing: bool = True,
-                 precision: str = "f32"):
+                 precision: str = "f32",
+                 postprocess: str = "host",
+                 boxes_capacity: int = 256):
         from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
 
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if postprocess not in ("host", "device"):
+            raise ValueError(
+                f"postprocess must be 'host' or 'device', got {postprocess!r}"
+            )
+        if boxes_capacity < 1:
+            raise ValueError("boxes_capacity must be >= 1")
+        # "device" compacts boxes on device (EngineFactory.boxes_fn);
+        # named _mode because postprocess() is the stage method
+        self.postprocess_mode = postprocess
+        self.boxes_capacity = boxes_capacity
         self.precision = check_precision(precision)
         self.plan: ExecutionPlan = plan if plan is not None else SingleDevice()
         self.planner = planner
@@ -189,7 +210,8 @@ class STDService:
                 planner.use_measurements(self.book,
                                          precision=self.precision)
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
-                                      "transposed": 0, "plan_choices": {}}
+                                      "transposed": 0, "plan_choices": {},
+                                      "nonconverged": 0, "pp_overflow": 0}
 
     @property
     def _engines(self):
@@ -271,8 +293,13 @@ class STDService:
     def _dispatch(self, stack: np.ndarray,
                   valid_hws: List[Tuple[int, int]]):
         """Route + pad + submit one batch; returns the pending device
-        array and the step-telemetry meta ``(hw, batch, kind, t0)`` the
-        completion path hands to :meth:`_record_step`."""
+        tuple — ``(labels, converged)`` on the host-postprocess path,
+        ``(labels, converged, rows, counts)`` with the compact on-device
+        boxes on the device path — and the step-telemetry meta
+        ``(hw, batch, kind, t0)`` the completion path hands to
+        :meth:`_record_step`.  Nothing here blocks: the boxes fn is a
+        jitted call on the pending labels, so it joins the same async
+        dispatch chain."""
         hw = tuple(stack.shape[1:3])
         n_live = len(valid_hws)
         b = round_batch(n_live, self.max_batch, self.batch_round)
@@ -290,7 +317,16 @@ class STDService:
         fn = self.factory.plan_fn(hw, b, plan, self.precision)
         params = self.factory.params(hw, self.precision)
         t0 = time.perf_counter()
-        pending = fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
+        labels, converged = fn(params, jnp.asarray(stack),
+                               jnp.asarray(valid_q))
+        if self.postprocess_mode == "device":
+            # labels are already valid-masked, so padding contributes no
+            # components; coordinates live in label-map (quarter) space
+            rows, counts = self.factory.boxes_fn(
+                hw, b, self.boxes_capacity)(labels)
+            pending = (labels, converged, rows, counts)
+        else:
+            pending = (labels, converged)
         return pending, (hw, b, plan_kind(plan), t0)
 
     def _record_step(self, meta) -> None:
@@ -308,33 +344,107 @@ class STDService:
 
     def dispatch_labels(self, stack: np.ndarray,
                         valid_hws: List[Tuple[int, int]]):
-        """(B, bh, bw, 3) padded batch -> pending (B, bh/4, bw/4) int32
-        label maps, NON-blocking: the returned device array is
-        un-materialized (JAX async dispatch), so the caller can submit
-        the next bucket's batch while this one's H2D/compute/D2H run.
-        Materialize with ``np.asarray`` (the completion stage's job).
+        """(B, bh, bw, 3) padded batch -> pending device tuple —
+        ``(labels, converged)`` label maps (B, bh/4, bw/4) int32 plus
+        the per-image convergence flags, with the compact
+        ``(rows, counts)`` boxes appended on the device-postprocess
+        path.  NON-blocking: the returned arrays are un-materialized
+        (JAX async dispatch), so the caller can submit the next bucket's
+        batch while this one's H2D/compute/D2H run.  Materialize with
+        ``np.asarray`` (the completion stage's job).
 
         The batch axis may be padded past ``len(valid_hws)`` (batch-size
-        rounding); trailing slots are zero images whose labels are
+        rounding); trailing slots are zero images whose outputs are
         discarded by the caller.
         """
         return self._dispatch(stack, valid_hws)[0]
 
     def infer_labels(self, stack: np.ndarray,
                      valid_hws: List[Tuple[int, int]]) -> np.ndarray:
-        """Blocking dispatch + materialize (the synchronous path)."""
+        """Blocking dispatch + materialized LABEL MAPS (the synchronous
+        path; benchmarks' warm loops key on this full-plane D2H)."""
         pending, meta = self._dispatch(stack, valid_hws)
-        labels = np.asarray(pending)
+        labels = np.asarray(pending[0])
         self._record_step(meta)
+        self._count_nonconverged(np.asarray(pending[1]))
         return labels
 
-    def postprocess(self, labels: np.ndarray, valid_hw: Tuple[int, int],
-                    transposed: bool) -> List[Dict]:
-        """One image's label map -> boxes (host-side serving tail)."""
+    def _count_nonconverged(self, converged) -> None:
+        """Count label maps that hit max_iters still changing — the
+        silently-unconverged case the CC tail used to swallow.  Padded
+        batch slots are all-zero images that converge in one round, so
+        counting the full padded batch is exact."""
+        k = int(np.size(converged) - np.count_nonzero(converged))
+        if k:
+            with self._lock:
+                self.stats["nonconverged"] += k
+            self.book.incr("pp_nonconverged", k)
+
+    def _finalize(self, raw):
+        """Materialize one dispatched batch into per-item postprocess
+        payloads: a ``(rows, count)`` compact-box tuple per image on the
+        device path (falling back to the full label map when the
+        component count overflows ``boxes_capacity`` — counted, never
+        wrong), or the label map per image on the host path.  Records
+        the ``stage="step"`` wall and the non-convergence counter."""
+        pending, meta = raw
+        if len(pending) == 4:
+            labels, converged, rows, counts = pending
+            rows = np.asarray(rows)                  # compact D2H payload
+            counts = np.asarray(counts)
+            self._record_step(meta)
+            self._count_nonconverged(np.asarray(converged))
+            out: List[Any] = []
+            for i in range(rows.shape[0]):
+                if counts[i] > self.boxes_capacity:
+                    with self._lock:
+                        self.stats["pp_overflow"] += 1
+                    self.book.incr("pp_overflow")
+                    out.append(np.asarray(labels[i]))
+                else:
+                    out.append((rows[i], int(counts[i])))
+            return out
+        labels, converged = pending
+        labels = np.asarray(labels)
+        self._record_step(meta)
+        self._count_nonconverged(np.asarray(converged))
+        return [labels[i] for i in range(labels.shape[0])]
+
+    def postprocess(self, labels, valid_hw: Tuple[int, int],
+                    transposed: bool,
+                    bucket_hw: Optional[Tuple[int, int]] = None
+                    ) -> List[Dict]:
+        """One image's inference output -> boxes (the serving tail).
+
+        Type-dispatches on the payload: a ``(rows, count)`` tuple is the
+        device-compact path (trivial O(capacity) decode), an ndarray is
+        the host path (valid-region crop + single-pass extraction).
+        Either way the per-image wall lands in the CostBook under
+        ``stage="postprocess"`` keyed by the bucket shape (derived from
+        the label plane when ``bucket_hw`` isn't given — the
+        device-compact rows carry no plane, so tuple payloads require
+        it)."""
         from repro.models.fcn import postprocess as pp
 
-        vh, vw = valid_hw[0] // 4, valid_hw[1] // 4
-        boxes = pp.boxes_from_labels(np.asarray(labels)[:vh, :vw])
+        t0 = time.perf_counter()
+        if isinstance(labels, tuple):               # device-compact rows
+            if bucket_hw is None:
+                raise ValueError(
+                    "device-compact payloads carry no plane shape; pass "
+                    "bucket_hw"
+                )
+            boxes = pp.boxes_from_compact(labels[0])
+            kind = "device"
+        else:
+            lab = np.asarray(labels)
+            if bucket_hw is None:
+                bucket_hw = (lab.shape[0] * 4, lab.shape[1] * 4)
+            vh, vw = valid_hw[0] // 4, valid_hw[1] // 4
+            boxes = pp.boxes_from_labels(lab[:vh, :vw])
+            kind = "host"
+        self.book.record_step(tuple(bucket_hw), 1, kind,
+                              time.perf_counter() - t0,
+                              stage="postprocess")
         if transposed:                              # inverse transposition
             for b in boxes:
                 x0, y0, x1, y1 = b["box"]
@@ -390,8 +500,9 @@ class STDService:
     def __call__(self, img: np.ndarray) -> List[Dict]:
         t0 = time.perf_counter()
         x, valid, tr = self.preprocess(img)
-        labels = self.infer_labels(x[None], [valid])[0]
-        boxes = self.postprocess(labels, valid, tr)
+        out = self._finalize(self._dispatch(x[None], [valid]))[0]
+        boxes = self.postprocess(out, valid, tr,
+                                 bucket_hw=tuple(x.shape[:2]))
         self._record_request(time.perf_counter() - t0)
         return boxes
 
@@ -402,12 +513,12 @@ class STDService:
 
         def infer(item):
             x, valid, tr = item
-            labels = self.infer_labels(x[None], [valid])[0]
-            return labels, valid, tr
+            out = self._finalize(self._dispatch(x[None], [valid]))[0]
+            return out, valid, tr, tuple(x.shape[:2])
 
         def post(item):
-            labels, valid, tr = item
-            return self.postprocess(labels, valid, tr)
+            out, valid, tr, bhw = item
+            return self.postprocess(out, valid, tr, bucket_hw=bhw)
 
         pipe = HostPipeline([pre, infer, post], maxsize=4)
         t0 = time.perf_counter()
@@ -427,18 +538,16 @@ class STDService:
         return self._dispatch(stack, [p[1] for p in payloads])
 
     def _mb_finalize(self, key, raw):
-        """Completion stage: block on the device result (D2H), record
-        the measured step wall, and split the batched label map into
-        per-item maps (the batch axis may be padded; the scheduler zips
-        against live items only)."""
-        pending, meta = raw
-        labels = np.asarray(pending)
-        self._record_step(meta)
-        return [labels[i] for i in range(labels.shape[0])]
+        """Completion stage: block on the device result (D2H — the full
+        label planes on the host path, the compact boxes tensor on the
+        device path), record the measured step wall, and split into
+        per-item payloads (the batch axis may be padded; the scheduler
+        zips against live items only)."""
+        return self._finalize(raw)
 
-    def _mb_post(self, payload, labels):
-        _, valid, tr = payload
-        return self.postprocess(labels, valid, tr)
+    def _mb_post(self, payload, out):
+        x, valid, tr = payload
+        return self.postprocess(out, valid, tr, bucket_hw=tuple(x.shape[:2]))
 
     def start_batched(self) -> "STDService":
         """Start the micro-batching scheduler (idempotent)."""
@@ -510,13 +619,17 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--precision", default="f32", choices=["f32", "bfp"])
+    ap.add_argument("--postprocess", default="host",
+                    choices=["host", "device"],
+                    help="box extraction: host label-map decode or "
+                         "on-device compact rows")
     args = ap.parse_args(argv)
 
     from repro.data.images import RequestStream
 
     svc = STDService(width=args.width, mode=args.mode,
                      max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-                     precision=args.precision)
+                     precision=args.precision, postprocess=args.postprocess)
     images = RequestStream(
         args.requests, seed=0, hw_range=((48, 120), (48, 120))
     ).images()

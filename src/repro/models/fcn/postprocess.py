@@ -2,9 +2,29 @@
 positive links; each CC is a detected text box (paper §III.A / PixelLink).
 
 ``cc_label`` is pure JAX (iterative max-label propagation in a while_loop
-— TPU-friendly, no host sync); ``cc_label_numpy`` is the union-find oracle
-used by the tests; ``boxes_from_labels`` extracts axis-aligned boxes on
-host for the serving pipeline.
+— TPU-friendly, no host sync).  Each label value encodes a linear pixel
+index + 1, which buys two things:
+
+  * **log-hop convergence** (``hop="log"``, the default): after the
+    one-hop neighbor spread, a pointer-jumping step chases each label
+    through the current label map (``labels <- max(labels,
+    labels[labels - 1])``).  Because ``labels[p] - 1`` always indexes a
+    pixel of p's own component (the spread only ever imports a linked
+    neighbor's value, and values only grow toward the component max),
+    the jump squares the reach per iteration — O(log diameter) rounds to
+    the same fixpoint the one-hop path reaches in O(diameter).
+  * **on-device box extraction** (``boxes_from_labels_jax``): converged
+    label values are component ids, so a segment-reduce over pixel
+    coordinates compacts a full (H, W) label map into a fixed-capacity
+    ``(capacity + 1, 6)`` boxes tensor — the serving tail then
+    materializes a few hundred bytes instead of the whole plane
+    (docs/serving.md "Postprocess pipeline").
+
+``cc_label_numpy`` is the union-find oracle used by the tests;
+``boxes_from_labels`` extracts axis-aligned boxes on host for the
+serving pipeline (single pass — scatter min/max + bincount);
+``boxes_from_compact`` decodes the device-side compact rows into the
+same box dicts.
 """
 from __future__ import annotations
 
@@ -21,6 +41,11 @@ NEIGHBORS: Tuple[Tuple[int, int], ...] = (
     (1, -1), (1, 0), (1, 1),
 )
 
+#: label-propagation flavors: "log" = one-hop spread + pointer jumping
+#: (O(log diameter) iterations), "one" = the plain one-hop spread
+#: (O(diameter) — kept for the worst-case regression tests)
+CC_HOPS = ("log", "one")
+
 
 def link_symmetrize(links: jax.Array) -> jax.Array:
     """links (..., H, W, 8) -> OR with the reciprocal direction (PixelLink
@@ -34,39 +59,73 @@ def link_symmetrize(links: jax.Array) -> jax.Array:
     return jnp.stack(outs, axis=-1)
 
 
-def cc_label(
+def cc_init_labels(pos: jax.Array) -> jax.Array:
+    """Initial label map: each positive pixel holds its linear index + 1."""
+    H, W = pos.shape
+    return jnp.where(
+        pos, jnp.arange(1, H * W + 1, dtype=jnp.int32).reshape(H, W), 0
+    )
+
+
+def cc_spread(labels: jax.Array, pos: jax.Array, lnk: jax.Array) -> jax.Array:
+    """One hop of max-label propagation across positive links."""
+    out = labels
+    for d, (dy, dx) in enumerate(NEIGHBORS):
+        # label of neighbor q = p + (dy, dx), viewed at p
+        shifted = jnp.roll(labels, shift=(-dy, -dx), axis=(0, 1))
+        # mask out wrap-around rows/cols
+        if dy == 1:
+            shifted = shifted.at[-1, :].set(0)
+        elif dy == -1:
+            shifted = shifted.at[0, :].set(0)
+        if dx == 1:
+            shifted = shifted.at[:, -1].set(0)
+        elif dx == -1:
+            shifted = shifted.at[:, 0].set(0)
+        take = lnk[..., d] & pos
+        out = jnp.where(take, jnp.maximum(out, shifted), out)
+    return jnp.where(pos, out, 0)
+
+
+def cc_pointer_jump(labels: jax.Array, pos: jax.Array) -> jax.Array:
+    """Pointer jumping: ``labels <- max(labels, labels[labels - 1])``.
+
+    Invariant: for a positive pixel p, ``labels[p] - 1`` is the linear
+    index of a pixel in p's component (true at init, preserved by both
+    the spread and the jump), so the hop stays inside the component and
+    values stay bounded by the component max — same fixpoint as the
+    one-hop spread, reached in O(log diameter) iterations."""
+    H, W = labels.shape
+    flat = labels.reshape(-1)
+    ptr = jnp.take(flat, jnp.clip(flat - 1, 0, flat.shape[0] - 1))
+    return jnp.where(pos, jnp.maximum(labels, ptr.reshape(H, W)), 0)
+
+
+def check_hop(hop: str) -> str:
+    if hop not in CC_HOPS:
+        raise ValueError(f"unknown hop {hop!r}; expected one of {CC_HOPS}")
+    return hop
+
+
+def cc_label_stats(
     score: jax.Array,          # (H, W) probabilities
     links: jax.Array,          # (H, W, 8)
     score_thr: float = 0.5,
     link_thr: float = 0.5,
     max_iters: int = 256,
-) -> jax.Array:
-    """Label map (H, W) int32; 0 = background, labels = max linear index+1
-    within the component."""
-    H, W = score.shape
+    hop: str = "log",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``cc_label`` plus convergence diagnostics:
+    ``(labels, iters, converged)``.
+
+    ``iters`` is the number of propagation rounds actually run;
+    ``converged`` is False iff the loop hit ``max_iters`` while labels
+    were still changing — the silently-wrong case the serving path
+    counts (CostBook ``pp_nonconverged``) instead of swallowing."""
+    check_hop(hop)
     pos = score > score_thr
     lnk = link_symmetrize(links) > link_thr
-    init = jnp.where(
-        pos, jnp.arange(1, H * W + 1, dtype=jnp.int32).reshape(H, W), 0
-    )
-
-    def spread(labels):
-        out = labels
-        for d, (dy, dx) in enumerate(NEIGHBORS):
-            # label of neighbor q = p + (dy, dx), viewed at p
-            shifted = jnp.roll(labels, shift=(-dy, -dx), axis=(0, 1))
-            # mask out wrap-around rows/cols
-            if dy == 1:
-                shifted = shifted.at[-1, :].set(0)
-            elif dy == -1:
-                shifted = shifted.at[0, :].set(0)
-            if dx == 1:
-                shifted = shifted.at[:, -1].set(0)
-            elif dx == -1:
-                shifted = shifted.at[:, 0].set(0)
-            take = lnk[..., d] & pos
-            out = jnp.where(take, jnp.maximum(out, shifted), out)
-        return jnp.where(pos, out, 0)
+    init = cc_init_labels(pos)
 
     def cond(state):
         labels, changed, it = state
@@ -74,11 +133,31 @@ def cc_label(
 
     def body(state):
         labels, _, it = state
-        new = spread(labels)
+        new = cc_spread(labels, pos, lnk)
+        if hop == "log":
+            new = cc_pointer_jump(new, pos)
         return new, jnp.any(new != labels), it + 1
 
-    labels, _, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True), 0))
-    return labels
+    labels, changed, it = jax.lax.while_loop(
+        cond, body, (init, jnp.bool_(True), jnp.int32(0))
+    )
+    return labels, it, ~changed
+
+
+def cc_label(
+    score: jax.Array,          # (H, W) probabilities
+    links: jax.Array,          # (H, W, 8)
+    score_thr: float = 0.5,
+    link_thr: float = 0.5,
+    max_iters: int = 256,
+    hop: str = "log",
+) -> jax.Array:
+    """Label map (H, W) int32; 0 = background, labels = max linear index+1
+    within the component.  ``hop="log"`` (default) converges in O(log
+    diameter) rounds via pointer jumping; ``hop="one"`` is the legacy
+    one-hop propagation."""
+    return cc_label_stats(score, links, score_thr, link_thr, max_iters,
+                          hop)[0]
 
 
 def cc_label_batched(
@@ -88,20 +167,28 @@ def cc_label_batched(
     link_thr: float = 0.5,
     max_iters: int = 256,
     valid_mask: Optional[jax.Array] = None,    # (N, H, W) bool
-) -> jax.Array:
+    hop: str = "log",
+    return_stats: bool = False,
+):
     """Vectorized ``cc_label`` over a leading batch axis -> (N, H, W) int32.
 
     The per-image propagation is a fixpoint, so the batched while_loop
     (which iterates until EVERY image converges) yields exactly the
-    per-image result.  ``valid_mask`` zeroes scores outside each image's
+    per-image result — and the vmapped loop state keeps exact per-image
+    ``iters``/``converged`` (an element whose cond is False stops
+    updating).  ``valid_mask`` zeroes scores outside each image's
     valid region so bucket padding can never grow or merge components —
     used by the serving path where images of different true sizes share
-    one padded batch shape.
-    """
+    one padded batch shape.  With ``return_stats`` the result is
+    ``(labels, iters, converged)`` with (N,) diagnostics."""
     if valid_mask is not None:
         score = jnp.where(valid_mask, score, 0.0)
-    f = lambda s, l: cc_label(s, l, score_thr, link_thr, max_iters)
-    return jax.vmap(f)(score, links)
+    f = lambda s, l: cc_label_stats(s, l, score_thr, link_thr, max_iters,
+                                    hop)
+    labels, iters, converged = jax.vmap(f)(score, links)
+    if return_stats:
+        return labels, iters, converged
+    return labels
 
 
 def cc_label_numpy(
@@ -142,7 +229,45 @@ def cc_label_numpy(
 
 
 def boxes_from_labels(labels: np.ndarray, min_area: int = 1) -> List[Dict]:
-    """Axis-aligned boxes per component (host-side, serving tail)."""
+    """Axis-aligned boxes per component (host-side, serving tail).
+
+    Single pass over the positive pixels: compact the label values once
+    (``np.unique(return_inverse=True)``), then scatter-reduce the
+    coordinate extrema (``np.minimum.at`` / ``np.maximum.at``) and count
+    areas with ``np.bincount`` — O(H*W + K) instead of the old
+    O(K * H*W) full-plane scan per component.  Output order (ascending
+    label value) and contents are identical to the reference
+    implementation (parity-pinned in tests)."""
+    labels = np.asarray(labels)
+    ys, xs = np.nonzero(labels)
+    if ys.size == 0:
+        return []
+    uniq, inv = np.unique(labels[ys, xs], return_inverse=True)
+    k = uniq.size
+    x0 = np.full(k, np.iinfo(np.int64).max)
+    y0 = np.full(k, np.iinfo(np.int64).max)
+    x1 = np.full(k, -1)
+    y1 = np.full(k, -1)
+    np.minimum.at(x0, inv, xs)
+    np.minimum.at(y0, inv, ys)
+    np.maximum.at(x1, inv, xs)
+    np.maximum.at(y1, inv, ys)
+    area = np.bincount(inv, minlength=k)
+    return [
+        {
+            "label": int(uniq[i]),
+            "box": (int(x0[i]), int(y0[i]), int(x1[i]), int(y1[i])),
+            "area": int(area[i]),
+        }
+        for i in range(k)
+        if area[i] >= min_area
+    ]
+
+
+def boxes_from_labels_reference(labels: np.ndarray,
+                                min_area: int = 1) -> List[Dict]:
+    """The original quadratic extraction (per-label full-plane scan) —
+    kept as the parity oracle for :func:`boxes_from_labels`."""
     labels = np.asarray(labels)
     out = []
     for lab in np.unique(labels):
@@ -159,11 +284,89 @@ def boxes_from_labels(labels: np.ndarray, min_area: int = 1) -> List[Dict]:
     return out
 
 
+#: fill value marking unused unique-label slots in the device extraction
+#: (larger than any real label: labels are bounded by H*W + 1)
+_BOX_FILL = np.iinfo(np.int32).max
+
+
+def boxes_from_labels_jax(labels: jax.Array, capacity: int):
+    """On-device box extraction: (H, W) int32 label map ->
+    ``(rows, n_components)`` with ``rows`` a ``(capacity + 1, 6)`` int32
+    tensor of ``(label, x0, y0, x1, y1, area)`` and ``n_components`` the
+    EXACT component count.
+
+    The label values are compacted with a fixed-size sorted
+    ``jnp.unique`` (slot 0 absorbs the background 0 when present; unused
+    slots carry the fill sentinel at the end), pixel coordinates are
+    segment-min/max-reduced into their label's slot, and areas are
+    segment-summed — all O(H*W), no host sync.  Rows are ordered by
+    ascending label value, exactly matching the host
+    :func:`boxes_from_labels` order; invalid slots are all-zero.
+
+    ``n_components`` counts fixpoint representatives (pixels whose label
+    is their own index + 1) — exact for converged label maps regardless
+    of capacity, so ``n_components > capacity`` detects truncation (the
+    serving path falls back to host extraction for that image; an
+    unconverged map can only overcount, never hide an overflow)."""
+    H, W = labels.shape
+    npx = H * W
+    flat = labels.reshape(-1).astype(jnp.int32)
+    fill = jnp.int32(_BOX_FILL)
+    uniq = jnp.unique(flat, size=capacity + 1, fill_value=fill)
+    slot = jnp.clip(jnp.searchsorted(uniq, flat), 0, capacity)
+    # a pixel contributes only when its label actually owns the slot
+    # (overflowed labels miss — their rows are garbage anyway, and the
+    # exact count below forces the fallback path)
+    ok = (jnp.take(uniq, slot) == flat) & (flat > 0)
+    idx = jnp.arange(npx, dtype=jnp.int32)
+    ys, xs = idx // W, idx % W
+    big = jnp.int32(max(H, W))
+    seg = capacity + 1
+    x0 = jax.ops.segment_min(jnp.where(ok, xs, big), slot, num_segments=seg)
+    y0 = jax.ops.segment_min(jnp.where(ok, ys, big), slot, num_segments=seg)
+    x1 = jax.ops.segment_max(jnp.where(ok, xs, -1), slot, num_segments=seg)
+    y1 = jax.ops.segment_max(jnp.where(ok, ys, -1), slot, num_segments=seg)
+    area = jax.ops.segment_sum(ok.astype(jnp.int32), slot, num_segments=seg)
+    lab = jnp.where((uniq > 0) & (uniq < fill), uniq, 0)
+    rows = jnp.stack([lab, x0, y0, x1, y1, area], axis=-1)
+    rows = jnp.where(((lab > 0) & (area > 0))[:, None], rows, 0)
+    n = jnp.sum((flat == idx + 1).astype(jnp.int32))
+    return rows, n
+
+
+def boxes_from_labels_batched_jax(labels: jax.Array, capacity: int):
+    """Batched :func:`boxes_from_labels_jax`: (N, H, W) ->
+    ``((N, capacity + 1, 6) rows, (N,) counts)``."""
+    return jax.vmap(lambda l: boxes_from_labels_jax(l, capacity))(labels)
+
+
+def boxes_from_compact(rows: np.ndarray, min_area: int = 1) -> List[Dict]:
+    """Decode device-side compact box rows into the host box dicts —
+    the trivial O(capacity) tail of the device postprocess path.
+    Row order (ascending label) is preserved, so the output matches
+    :func:`boxes_from_labels` on the same label map exactly."""
+    rows = np.asarray(rows)
+    keep = (rows[:, 0] > 0) & (rows[:, 5] >= min_area)
+    return [
+        {
+            "label": int(lab),
+            "box": (int(x0), int(y0), int(x1), int(y1)),
+            "area": int(area),
+        }
+        for lab, x0, y0, x1, y1, area in rows[keep]
+    ]
+
+
 def f_measure(
     pred_boxes: List[Dict], gt_boxes: List[Tuple[int, int, int, int]],
     iou_thr: float = 0.5,
 ) -> Dict[str, float]:
-    """IoU-matched precision/recall/F (the paper's Table VI metrics)."""
+    """IoU-matched precision/recall/F (the paper's Table VI metrics).
+
+    Each prediction greedily matches the unmatched GT box with the
+    HIGHEST IoU at or above the threshold (not the first one past it —
+    first-past-threshold matching can burn a GT another prediction
+    overlaps better, under-counting TPs on overlapping GTs)."""
     def iou(a, b):
         ax0, ay0, ax1, ay1 = a
         bx0, by0, bx1, by1 = b
@@ -178,13 +381,16 @@ def f_measure(
     matched_gt = set()
     tp = 0
     for pb in pred_boxes:
+        best_gi, best_iou = -1, 0.0
         for gi, gb in enumerate(gt_boxes):
             if gi in matched_gt:
                 continue
-            if iou(pb["box"], gb) >= iou_thr:
-                matched_gt.add(gi)
-                tp += 1
-                break
+            v = iou(pb["box"], gb)
+            if v >= iou_thr and v > best_iou:
+                best_gi, best_iou = gi, v
+        if best_gi >= 0:
+            matched_gt.add(best_gi)
+            tp += 1
     prec = tp / max(len(pred_boxes), 1)
     rec = tp / max(len(gt_boxes), 1)
     f = 2 * prec * rec / max(prec + rec, 1e-9)

@@ -67,6 +67,7 @@ to XLA (:func:`_donate_argnums`).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import inspect
 import threading
 import time
@@ -233,8 +234,14 @@ class EngineFactory:
     serves every band plane derived from it).  Legacy single-argument
     ``make_model(hw)`` callables still work but pin the factory to
     ``"f32"``.  The compiled callable is ``fn(params, x, valid_q) ->
-    labels``: FCN forward, per-image valid-region masking, batched CC
-    labeling.
+    (labels, converged)``: FCN forward, per-image valid-region masking,
+    batched CC labeling (log-hop pointer jumping), and the per-image
+    convergence flag the serving layer counts instead of swallowing.
+    On TPU the CC tail routes through the Pallas tile-local kernel
+    (``cc_pallas=None`` derives from the backend; force with
+    True/False), and :meth:`boxes_fn` compiles the on-device compact
+    box extraction the device postprocess path rides
+    (docs/serving.md "Postprocess pipeline").
 
     Parameters are per-precision without being independent: the f32
     cache holds the deterministic PRNGKey(0) initialization, and the
@@ -262,6 +269,7 @@ class EngineFactory:
         link_thr: float = 0.5,
         capacity: int = 16,
         book: Any = None,
+        cc_pallas: Any = None,
     ):
         self.make_model = make_model
         # legacy make_model(hw) callables take one parameter; the
@@ -279,6 +287,11 @@ class EngineFactory:
         self.score_thr = score_thr
         self.link_thr = link_thr
         self.book = book
+        # Pallas tile-local CC kernel only beats the jnp while_loop where
+        # it actually compiles (TPU Mosaic); elsewhere the interpreter
+        # would be orders of magnitude slower than XLA
+        self.cc_pallas = (jax.default_backend() == "tpu"
+                          if cc_pallas is None else bool(cc_pallas))
         # model/param caches are LRU-bounded like the engines: oversize
         # inputs clamp to an open-ended set of padded shapes (bucket_hw),
         # so unbounded dicts would leak a parameter tree per shape
@@ -373,6 +386,8 @@ class EngineFactory:
         return timed
 
     def _label_tail(self, score, links, valid_q):
+        """Batched CC labeling tail -> (labels, converged) with the
+        per-image (N,) convergence flag (iters stay internal)."""
         from repro.models.fcn import postprocess as pp
 
         h, w = score.shape[1:]
@@ -380,9 +395,43 @@ class EngineFactory:
             (jnp.arange(h)[None, :, None] < valid_q[:, 0, None, None])
             & (jnp.arange(w)[None, None, :] < valid_q[:, 1, None, None])
         )
-        return pp.cc_label_batched(
-            score, links, self.score_thr, self.link_thr, valid_mask=mask
+        if self.cc_pallas:
+            from repro.kernels.cc_label import cc_label_pallas
+
+            labels, _, converged = cc_label_pallas(
+                score, links, self.score_thr, self.link_thr,
+                valid_mask=mask, return_stats=True,
+            )
+        else:
+            labels, _, converged = pp.cc_label_batched(
+                score, links, self.score_thr, self.link_thr,
+                valid_mask=mask, return_stats=True,
+            )
+        return labels, converged
+
+    def boxes_fn(self, hw: Tuple[int, int], batch: int,
+                 capacity: int) -> Callable:
+        """Compiled on-device box extraction for one (bucket, batch)
+        shape: ``fn(labels (N, h, w) int32) -> (rows, counts)`` with
+        ``rows`` (N, capacity + 1, 6) and ``counts`` (N,) — the compact
+        D2H payload of the device postprocess path (postprocess
+        ``boxes_from_labels_batched_jax``).  Cached in the engine LRU
+        alongside the plan fns (distinct key namespace)."""
+        from repro.models.fcn import postprocess as pp
+
+        key = ("boxes", tuple(hw), int(batch), int(capacity))
+        fn = self._engines.get(key)
+        if fn is not None:
+            return fn
+        fn = jax.jit(functools.partial(
+            pp.boxes_from_labels_batched_jax, capacity=int(capacity)
+        ))
+        self.stats.setdefault("boxes_compiled", []).append(
+            {"hw": tuple(hw), "batch": int(batch),
+             "capacity": int(capacity)}
         )
+        self._engines.put(key, fn)
+        return fn
 
     def _compile(self, hw, batch, plan, precision: str = "f32") -> Callable:
         if isinstance(plan, SingleDevice):
@@ -426,7 +475,7 @@ class EngineFactory:
         return jax.jit(shard_map_compat(
             shard, plan.mesh,
             in_specs=(P(), specs["image"], P(plan.axis)),
-            out_specs=specs["labels"],
+            out_specs=(specs["labels"], P(plan.axis)),
         ), donate_argnums=_donate_argnums())
 
     def _compile_row_band(self, hw, plan, precision: str = "f32") -> Callable:

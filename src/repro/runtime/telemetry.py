@@ -182,6 +182,16 @@ class CostBook:
             s = self._steps.get(key)
             return s.percentile(q) if s is not None else None
 
+    def step_total(self, hw, batch, kind, *, stage: str = "step",
+                   precision: str = "f32") -> float:
+        """Cumulative wall seconds for one combo — the busy-time view
+        (e.g. summing ``stage="postprocess"`` walls across buckets gives
+        each postprocess mode's total tail cost in an A/B)."""
+        key = (self._step_key(hw, batch, kind), stage, str(precision))
+        with self._lock:
+            s = self._steps.get(key)
+            return s.total if s is not None else 0.0
+
     def step_keys(self, *, stage: str = "step",
                   precision: str = "f32") -> List[StepKey]:
         """Every (hw, batch, kind) combo with at least one sample at

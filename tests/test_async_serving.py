@@ -144,7 +144,7 @@ class TestDispatchCompletionSplit:
             futs = [mb.submit("a", i) for i in range(4)]
             [f.result(timeout=10) for f in futs]
         occ = mb.stats["stage_occupancy"]
-        assert set(occ) == {"dispatch", "complete"}
+        assert set(occ) == {"dispatch", "complete", "post"}
         assert all(0.0 <= v for v in occ.values())
         assert mb.stats["dispatch_busy_s"] >= 0.0
         assert mb.stats["complete_busy_s"] >= 0.0
@@ -243,7 +243,7 @@ class TestAsyncSyncParitySingleDevice:
         assert got == sync
         b = svc.stats["batching"]
         assert b["inflight_peak"] >= 1
-        assert set(b["stage_occupancy"]) == {"dispatch", "complete"}
+        assert set(b["stage_occupancy"]) == {"dispatch", "complete", "post"}
 
     def test_sync_and_async_schedulers_agree(self):
         """inflight=0 (serialized) and inflight=2 (pipelined) schedulers

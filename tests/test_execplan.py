@@ -208,14 +208,18 @@ class TestUnitMeshPlanParity:
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.random((2, 64, 64, 3)).astype(np.float32))
         vq = jnp.asarray(np.array([[16, 16], [12, 14]], np.int32))
-        want = np.asarray(fac.plan_fn(hw, 2, SingleDevice())(params, x, vq))
+        want, want_conv = fac.plan_fn(hw, 2, SingleDevice())(params, x, vq)
+        want = np.asarray(want)
+        assert np.asarray(want_conv).all()
         from repro.runtime.executor import GridPlan
 
         for plan in (DataParallel(unit_mesh, "data"),
                      RowBand(unit_mesh, axis="model"),
                      GridPlan(unit_mesh)):
-            got = np.asarray(fac.plan_fn(hw, 2, plan)(params, x, vq))
-            np.testing.assert_array_equal(got, want)
+            got, conv = fac.plan_fn(hw, 2, plan)(params, x, vq)
+            np.testing.assert_array_equal(np.asarray(got), want)
+            assert np.asarray(conv).shape == (2,)
+            assert np.asarray(conv).all()
 
     def test_rowband_rejects_misaligned_bands(self):
         from repro.launch.mesh import make_host_mesh

@@ -282,12 +282,12 @@ class TestPlanParityProperty:
                     skipped[0] += 1
                     return
                 want = np.asarray(
-                    fac.plan_fn(hw, batch, SingleDevice())(params, x, vq))
+                    fac.plan_fn(hw, batch, SingleDevice())(params, x, vq)[0])
                 for plan in (DataParallel(mesh, "data"),
                              RowBand(mesh, axis="model"),
                              GridPlan(mesh)):
                     got = np.asarray(
-                        fac.plan_fn(hw, batch, plan)(params, x, vq))
+                        fac.plan_fn(hw, batch, plan)(params, x, vq)[0])
                     assert np.array_equal(got, want), (
                         f"{type(plan).__name__} diverged: hw={hw} "
                         f"batch={batch} seed={seed}")

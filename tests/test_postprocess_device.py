@@ -1,0 +1,360 @@
+"""Device-postprocess parity suite: log-hop CC labeling and the Pallas
+CCL kernel against the union-find oracle, on-device box extraction
+against the host tail, the serpentine worst case that motivated pointer
+jumping, the single-pass host extraction against its quadratic
+reference, the best-IoU f_measure regression, and the STDService
+device-postprocess wiring (overflow fallback + non-convergence counter).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # bare interpreter: seeded fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels.cc_label import cc_label_pallas, cc_label_ref
+from repro.models.fcn import postprocess as pp
+
+# fixed shape pool: repeated shapes keep the jitted pallas/batched calls
+# cache-warm across property examples; the non-16-multiples exercise the
+# phase-1 zero-padding path
+SHAPES = ((8, 12), (13, 9), (16, 16), (24, 20))
+
+
+def rand_maps(seed, H, W, p_link=0.5):
+    """Random score/link planes around the 0.5 thresholds."""
+    rng = np.random.default_rng(seed)
+    score = rng.uniform(0.0, 1.0, (H, W)).astype(np.float32)
+    links = (rng.uniform(0.0, 1.0, (H, W, 8)) < p_link).astype(np.float32)
+    return score, links
+
+
+def canon(labels):
+    """Canonical relabeling (first appearance in row-major order) — the
+    oracle roots components at the MIN linear index, cc_label at the MAX,
+    so labelings compare canonically.  Fresh mapping per call."""
+    labels = np.asarray(labels)
+    mapping = {}
+    out = np.zeros_like(labels, dtype=np.int32)
+    for y in range(labels.shape[0]):
+        for x in range(labels.shape[1]):
+            v = int(labels[y, x])
+            if v:
+                out[y, x] = mapping.setdefault(v, len(mapping) + 1)
+    return out
+
+
+def serpentine_maps(S):
+    """One S*S-pixel component linked only along a boustrophedon path —
+    graph diameter S*S, the worst case for one-hop label propagation."""
+    DIR = {off: d for d, off in enumerate(pp.NEIGHBORS)}
+    score = np.ones((S, S), np.float32)
+    links = np.zeros((S, S, 8), np.float32)
+    for y in range(S):
+        if y % 2 == 0:
+            for x in range(S - 1):
+                links[y, x, DIR[(0, 1)]] = 1.0
+            end = S - 1
+        else:
+            for x in range(S - 1, 0, -1):
+                links[y, x, DIR[(0, -1)]] = 1.0
+            end = 0
+        if y + 1 < S:
+            links[y, end, DIR[(1, 0)]] = 1.0
+    return score, links
+
+
+class TestLogHop:
+    """hop="log" pointer jumping: same components as the union-find
+    oracle, same label VALUES as the legacy one-hop spread."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(range(len(SHAPES))),
+           st.sampled_from((0.3, 0.5, 0.7)))
+    def test_matches_oracle_and_one_hop(self, seed, si, p_link):
+        H, W = SHAPES[si]
+        score, links = rand_maps(seed, H, W, p_link)
+        log, _, conv = pp.cc_label_stats(
+            jnp.asarray(score), jnp.asarray(links), hop="log")
+        assert bool(conv)
+        log = np.asarray(log)
+        want = pp.cc_label_numpy(score, links)
+        assert np.array_equal(log > 0, want > 0)
+        assert np.array_equal(canon(log), canon(want))
+        # both hops converge to component max linear index + 1: exact
+        one = np.asarray(pp.cc_label(
+            jnp.asarray(score), jnp.asarray(links), hop="one",
+            max_iters=2048))
+        assert np.array_equal(log, one)
+
+    def test_unknown_hop_rejected(self):
+        score, links = rand_maps(0, 8, 8)
+        with pytest.raises(ValueError, match="unknown hop"):
+            pp.cc_label(jnp.asarray(score), jnp.asarray(links), hop="warp")
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_batched_valid_mask(self, seed):
+        """Batched log-hop with per-image valid regions: each row equals
+        the unbatched call on the masked plane, zero outside the mask."""
+        N, H, W = 3, 16, 16
+        rng = np.random.default_rng(seed)
+        score = rng.uniform(0, 1, (N, H, W)).astype(np.float32)
+        links = (rng.uniform(0, 1, (N, H, W, 8)) < 0.6).astype(np.float32)
+        mask = np.zeros((N, H, W), bool)
+        for i, (vh, vw) in enumerate(((16, 16), (9, 12), (12, 7))):
+            mask[i, :vh, :vw] = True
+        out, iters, conv = pp.cc_label_batched(
+            jnp.asarray(score), jnp.asarray(links),
+            valid_mask=jnp.asarray(mask), return_stats=True)
+        assert conv.shape == (N,) and iters.shape == (N,)
+        assert bool(conv.all())
+        out = np.asarray(out)
+        for i in range(N):
+            masked = np.where(mask[i], score[i], 0.0).astype(np.float32)
+            want = np.asarray(pp.cc_label(jnp.asarray(masked),
+                                          jnp.asarray(links[i])))
+            assert np.array_equal(out[i], want)
+            assert (out[i][~mask[i]] == 0).all()
+
+
+class TestSerpentine:
+    """The worst case pointer jumping exists for: one serpentine
+    component of diameter S*S."""
+
+    def test_log_hop_bound_s16(self):
+        score, links = serpentine_maps(16)
+        labels, iters, conv = pp.cc_label_stats(
+            jnp.asarray(score), jnp.asarray(links), hop="log")
+        assert bool(conv)
+        # single component; every label is the max linear index + 1
+        assert np.array_equal(np.asarray(labels),
+                              np.full((16, 16), 256, np.int32))
+        # pointer jumping squares the reach: a 256-pixel chain must close
+        # in ~2*log2 rounds, not ~256
+        assert int(iters) <= 2 * math.ceil(math.log2(256)) + 4
+
+    def test_log_hop_beats_one_hop_s32(self):
+        score, links = serpentine_maps(32)
+        sj, lj = jnp.asarray(score), jnp.asarray(links)
+        log_lab, log_it, log_conv = pp.cc_label_stats(sj, lj, hop="log")
+        one_lab, one_it, one_conv = pp.cc_label_stats(sj, lj, hop="one",
+                                                      max_iters=1024)
+        assert bool(log_conv) and bool(one_conv)
+        assert np.array_equal(np.asarray(log_lab), np.asarray(one_lab))
+        # a 1024-pixel chain: one-hop needs ~diameter rounds, log-hop
+        # stays an order of magnitude under it
+        assert int(one_it) > 8 * int(log_it)
+
+    def test_one_hop_exhaustion_reported(self):
+        """max_iters hit while still changing must report converged=False
+        (the silently-wrong case the serving counter exists for)."""
+        score, links = serpentine_maps(32)
+        _, iters, conv = pp.cc_label_stats(
+            jnp.asarray(score), jnp.asarray(links), hop="one",
+            max_iters=20)
+        assert not bool(conv)
+        assert int(iters) == 20
+
+
+class TestPallasCCL:
+    """cc_label_pallas (interpret mode off-TPU) against the pure-jnp
+    reference (exact) and the union-find oracle (canonical)."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(range(len(SHAPES))),
+           st.sampled_from((0.4, 0.6)))
+    def test_matches_ref_and_oracle(self, seed, si, p_link):
+        H, W = SHAPES[si]
+        score, links = rand_maps(seed, H, W, p_link)
+        sj, lj = jnp.asarray(score), jnp.asarray(links)
+        got, iters, conv = cc_label_pallas(sj, lj, th=8, tw=8,
+                                           return_stats=True)
+        assert bool(conv) and int(iters) >= 0
+        got = np.asarray(got)
+        # same label VALUES as the log-hop reference, not just the same
+        # partition: both fixpoints are component max linear index + 1
+        assert np.array_equal(got, np.asarray(cc_label_ref(sj, lj)))
+        want = pp.cc_label_numpy(score, links)
+        assert np.array_equal(canon(got), canon(want))
+
+    def test_batched_with_valid_mask(self):
+        """Batched + padded bucket semantics: the padding mask zeroes
+        scores exactly like cc_label_batched's."""
+        N, H, W = 3, 24, 20
+        rng = np.random.default_rng(11)
+        score = rng.uniform(0, 1, (N, H, W)).astype(np.float32)
+        links = (rng.uniform(0, 1, (N, H, W, 8)) < 0.6).astype(np.float32)
+        mask = np.zeros((N, H, W), bool)
+        for i, (vh, vw) in enumerate(((24, 20), (17, 13), (8, 20))):
+            mask[i, :vh, :vw] = True
+        sj, lj, mj = jnp.asarray(score), jnp.asarray(links), jnp.asarray(mask)
+        got, _, conv = cc_label_pallas(sj, lj, valid_mask=mj, th=8, tw=8,
+                                       return_stats=True)
+        assert conv.shape == (N,) and bool(conv.all())
+        want = pp.cc_label_batched(sj, lj, valid_mask=mj)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        assert (np.asarray(got)[~mask] == 0).all()
+
+    def test_tile_crossing_component(self):
+        """One component spanning all four 8x8 tiles of a 16x16 plane:
+        phase 2 must stitch what phase 1 cannot see."""
+        score = np.zeros((16, 16), np.float32)
+        score[8, :] = 1.0            # horizontal bar crossing tile cols
+        score[:, 8] = 1.0            # vertical bar crossing tile rows
+        links = np.ones((16, 16, 8), np.float32)
+        got = np.asarray(cc_label_pallas(jnp.asarray(score),
+                                         jnp.asarray(links), th=8, tw=8))
+        pos = score > 0.5
+        assert (got[pos] == got[8, 8]).all()     # one component
+        assert (got[~pos] == 0).all()
+
+
+class TestBoxes:
+    """Single-pass host extraction vs the quadratic reference, and the
+    device compact rows vs the host tail."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(range(len(SHAPES))),
+           st.sampled_from((1, 3)))
+    def test_single_pass_matches_reference(self, seed, si, min_area):
+        H, W = SHAPES[si]
+        score, links = rand_maps(seed, H, W)
+        labels = pp.cc_label_numpy(score, links)
+        assert pp.boxes_from_labels(labels, min_area) == \
+            pp.boxes_from_labels_reference(labels, min_area)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(range(len(SHAPES))))
+    def test_device_rows_match_host(self, seed, si):
+        H, W = SHAPES[si]
+        score, links = rand_maps(seed, H, W)
+        labels = pp.cc_label(jnp.asarray(score), jnp.asarray(links))
+        host = pp.boxes_from_labels(np.asarray(labels))
+        rows, n = pp.boxes_from_labels_jax(labels, capacity=64)
+        assert int(n) == len(host)               # exact component count
+        rows = np.asarray(rows)
+        assert pp.boxes_from_compact(rows) == host
+        assert pp.boxes_from_compact(rows, min_area=3) == \
+            pp.boxes_from_labels(np.asarray(labels), min_area=3)
+
+    def test_overflow_detected_exactly(self):
+        # 9 isolated positive pixels, no links -> 9 singleton components
+        score = np.zeros((8, 8), np.float32)
+        score[::3, ::3] = 1.0
+        links = np.zeros((8, 8, 8), np.float32)
+        labels = pp.cc_label(jnp.asarray(score), jnp.asarray(links))
+        _, n_small = pp.boxes_from_labels_jax(labels, capacity=4)
+        assert int(n_small) == 9                 # count exact past capacity
+        rows, n = pp.boxes_from_labels_jax(labels, capacity=16)
+        assert int(n) == 9
+        assert pp.boxes_from_compact(np.asarray(rows)) == \
+            pp.boxes_from_labels(np.asarray(labels))
+
+    def test_batched_rows_match_per_image(self):
+        score0, links0 = rand_maps(3, 16, 16)
+        score1, links1 = rand_maps(4, 16, 16)
+        labels = pp.cc_label_batched(
+            jnp.asarray(np.stack([score0, score1])),
+            jnp.asarray(np.stack([links0, links1])))
+        rows, counts = pp.boxes_from_labels_batched_jax(labels, capacity=32)
+        assert rows.shape == (2, 33, 6) and counts.shape == (2,)
+        for i in range(2):
+            want_rows, want_n = pp.boxes_from_labels_jax(labels[i],
+                                                         capacity=32)
+            assert np.array_equal(np.asarray(rows[i]),
+                                  np.asarray(want_rows))
+            assert int(counts[i]) == int(want_n)
+
+    def test_empty_plane(self):
+        labels = jnp.zeros((8, 8), jnp.int32)
+        rows, n = pp.boxes_from_labels_jax(labels, capacity=4)
+        assert int(n) == 0
+        assert (np.asarray(rows) == 0).all()
+        assert pp.boxes_from_compact(np.asarray(rows)) == []
+
+
+class TestFMeasure:
+    def test_perfect_match(self):
+        preds = [{"label": 1, "box": (0, 0, 9, 9), "area": 100}]
+        m = pp.f_measure(preds, [(0, 0, 9, 9)])
+        assert m == {"precision": 1.0, "recall": 1.0,
+                     "f_measure": pytest.approx(1.0)}
+
+    def test_best_iou_not_first_past_threshold(self):
+        """Overlapping GTs: P1 overlaps A at 0.538 and B at 0.667, P2
+        overlaps A at 1.0 but B only at 0.33.  First-past-threshold
+        matching burns A on P1 (its first IoU >= 0.5) and strands P2 at
+        tp=1; best-IoU matching pairs P1-B and P2-A for tp=2."""
+        gts = [(0, 0, 9, 9), (5, 0, 14, 9)]               # A, B
+        preds = [{"label": 1, "box": (3, 0, 12, 9), "area": 100},   # P1
+                 {"label": 2, "box": (0, 0, 9, 9), "area": 100}]    # P2
+        m = pp.f_measure(preds, gts)
+        assert m["precision"] == 1.0 and m["recall"] == 1.0
+
+
+class TestServiceDevicePostprocess:
+    """STDService(postprocess="device") wiring: box parity with the host
+    tail on sync and batched paths, the overflow fallback, and the
+    non-convergence counter."""
+
+    @pytest.fixture(scope="class")
+    def images(self):
+        rng = np.random.default_rng(0)
+        return [rng.uniform(0, 1, (int(rng.integers(48, 65)),
+                                   int(rng.integers(48, 65)), 3)
+                            ).astype(np.float32) for _ in range(6)]
+
+    @pytest.fixture(scope="class")
+    def host_svc(self):
+        from repro.launch.serve import STDService
+
+        return STDService(width=0.125, buckets=(64,), max_batch=2)
+
+    def test_sync_and_batched_parity(self, images, host_svc):
+        from repro.launch.serve import STDService
+
+        dev = STDService(width=0.125, buckets=(64,), max_batch=2,
+                         postprocess="device")
+        want = [host_svc(img) for img in images]
+        assert [dev(img) for img in images] == want
+        assert dev.serve_batched(images) == want
+        assert dev.stats["pp_overflow"] == 0
+        # the tail walls landed under their own stage, keyed by kind
+        kinds = {k[2] for k in dev.book.step_keys(stage="postprocess")}
+        assert kinds == {"device"}
+        assert {k[2] for k in host_svc.book.step_keys(stage="postprocess")} \
+            == {"host"}
+
+    def test_overflow_falls_back_to_host_tail(self, images, host_svc):
+        """boxes_capacity=1 overflows on any multi-component image: the
+        per-image fallback must keep boxes exactly right and count every
+        overflow."""
+        from repro.launch.serve import STDService
+
+        dev = STDService(width=0.125, buckets=(64,), max_batch=2,
+                         postprocess="device", boxes_capacity=1)
+        assert [dev(img) for img in images] == \
+            [host_svc(img) for img in images]
+        assert dev.stats["pp_overflow"] > 0
+        assert dev.book.counter("pp_overflow") == dev.stats["pp_overflow"]
+
+    def test_nonconverged_counter(self, host_svc):
+        host_svc._count_nonconverged(np.array([True, False, True, False]))
+        assert host_svc.stats["nonconverged"] >= 2
+        assert host_svc.book.counter("pp_nonconverged") >= 2
+
+    def test_bad_config_rejected(self):
+        from repro.launch.serve import STDService
+
+        with pytest.raises(ValueError, match="postprocess"):
+            STDService(width=0.125, postprocess="gpu")
+        with pytest.raises(ValueError, match="boxes_capacity"):
+            STDService(width=0.125, postprocess="device", boxes_capacity=0)
