@@ -548,6 +548,90 @@ def run_postprocess_ab(*, requests: int = 48, width: float = 0.25,
     return out
 
 
+def run_model_zoo(models, *, requests: int = 8, width: float = 0.25,
+                  buckets=(64,), max_batch: int = 4,
+                  max_wait_ms: float = 8.0, seed: int = 0,
+                  pre_workers: int = 4, verbose: bool = True):
+    """Per-model box-parity gate + serving smoke over the detection zoo.
+
+    For each model, every request in ONE seeded stream runs a single
+    eager forward to materialize the head's maps, then BOTH decoders
+    consume those same maps: the serving path (the head's device tail +
+    ``decode``) and the head's pure-NumPy ``reference_decode`` oracle.
+    Comparing decodes of one map set gates the decode algorithms
+    themselves — jit-vs-eager forward numerics stay out of it, which
+    matters because random-init sigmoid scores cluster near the 0.5
+    threshold where a float-reassociation wiggle flips pixels.  The
+    gate is exact box-set equality per bucket (SystemExit on any
+    mismatch), followed by a micro-batched serving smoke through the
+    model's own compiled engines."""
+    import jax.numpy as jnp
+
+    from repro.data.images import RequestStream
+    from repro.launch.serve import STDService, bucket_hw
+    from repro.runtime.telemetry import CostBook
+
+    if requests < 1:
+        raise SystemExit("--requests must be >= 1")
+    images = RequestStream(
+        requests, seed=seed,
+        hw_range=((48, max(buckets)), (48, max(buckets))),
+    ).images()
+    out = {}
+    for name in models:
+        svc = STDService(width=width, buckets=tuple(buckets),
+                         max_batch=max_batch, max_wait_ms=max_wait_ms,
+                         engine_cache_capacity=0,
+                         book=CostBook(warmup=0), model=name)
+        head = svc.head
+        per_bucket: dict = {}
+        for img in images:
+            x, valid, tr = svc.preprocess(img)
+            hw = tuple(x.shape[:2])
+            model = svc.factory.model(hw, "f32", name)
+            params = svc.factory.params(hw, "f32", name)
+            maps = model.apply(params, jnp.asarray(x[None]))
+            vq = jnp.asarray([[valid[0] // 4, valid[1] // 4]], jnp.int32)
+            tail = head.tail(svc.factory, maps, vq)
+            arrs = [np.asarray(a)[0] for a in tail[:head.n_payload]]
+            payload = arrs[0] if head.n_payload == 1 else tuple(arrs)
+            got, _ = head.decode(payload, valid)
+            ref = head.reference_decode(
+                {k: np.asarray(v[0]) for k, v in maps.items()
+                 if k != "logits"},
+                valid,
+            )
+            ok = (sorted(b["box"] for b in got)
+                  == sorted(b["box"] for b in ref))
+            bkt = bucket_hw(img.shape[0], img.shape[1], tuple(buckets))
+            n_ok, n_all = per_bucket.get(bkt, (0, 0))
+            per_bucket[bkt] = (n_ok + ok, n_all + 1)
+        for bkt, (n_ok, n_all) in sorted(per_bucket.items()):
+            if verbose:
+                print(f"model_parity,model={name},"
+                      f"bucket={bkt[0]}x{bkt[1]},"
+                      f"boxes_equal={n_ok}/{n_all}")
+            if n_ok != n_all:
+                raise SystemExit(
+                    f"model-zoo parity FAILED for {name!r} at bucket "
+                    f"{bkt}: {n_all - n_ok}/{n_all} requests' serving "
+                    f"decode diverges from the NumPy reference decode"
+                )
+        results = svc.serve_batched(images, pre_workers=pre_workers)
+        out[name] = {
+            "tps": svc.stats["batched_tps"],
+            "boxes": [len(r) for r in results],
+            "parity": {f"{b[0]}x{b[1]}": v for b, v in per_bucket.items()},
+            "compiled": list(svc.factory.stats["compiled"]),
+        }
+        if verbose:
+            print(f"model_zoo,model={name},"
+                  f"tps {out[name]['tps']:.2f},"
+                  f"boxes {sum(out[name]['boxes'])},"
+                  f"engines {len(out[name]['compiled'])}")
+    return out
+
+
 def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
@@ -813,7 +897,24 @@ def main(argv=None):
                     help="device-postprocess compact-rows capacity "
                          "(components past it fall back to the host "
                          "path per image)")
+    ap.add_argument("--model", nargs="+", default=None,
+                    choices=["pixellink", "east", "db"],
+                    help="run the model-zoo sweep ONLY: for each named "
+                         "detection head, gate its serving decode "
+                         "against the NumPy reference decode on one "
+                         "seeded stream (exact box parity per bucket), "
+                         "then smoke-serve the stream through its "
+                         "compiled engines")
     args = ap.parse_args(argv)
+    if args.model:
+        return run_model_zoo(args.model,
+                             requests=args.requests,
+                             width=args.width,
+                             buckets=tuple(args.buckets),
+                             max_batch=args.max_batch,
+                             max_wait_ms=args.max_wait_ms,
+                             seed=args.seed,
+                             pre_workers=args.pre_workers)
     if args.postprocess == "device":
         return run_postprocess_ab(requests=args.requests,
                                   width=args.width,

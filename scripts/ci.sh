@@ -83,6 +83,19 @@ python -m pytest -q tests/test_postprocess_device.py
 python -m benchmarks.serve_bench --postprocess device \
   --width 0.125 --buckets 64 --max-batch 2 --requests 8
 
+echo "== tier-2: model zoo — EAST/DB parity suite + serve_bench --model smoke =="
+# The three detection heads through the one assembler->microcode seam:
+# golden disassembly byte-stability, cross-model engine-LRU keying,
+# per-model service routing, and each head's serving decode vs its
+# NumPy reference oracle — plus a tiny serve_bench --model sweep
+# proving the per-model box-parity gate passes end to end.  The suite
+# also runs in the fast tiers; this stage keeps it failing loudly when
+# CI is invoked with path args that skip them.
+python -m pytest -q tests/test_model_zoo.py
+python scripts/regen_golden_models.py --check
+python -m benchmarks.serve_bench --model pixellink east db \
+  --width 0.125 --buckets 64 --max-batch 2 --requests 6
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override

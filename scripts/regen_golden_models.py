@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/microcode_<model>.txt.
+
+Each golden file freezes one zoo model's full microcode disassembly
+(the canonical tiny-vgg16 build from tests/test_model_zoo.py's
+``golden_model``), so any assembler or head-spec edit that shifts an
+address, channel count, or ext op fails the byte-stability test with a
+diff naming the exact word.  When a shift is INTENTIONAL (a new layer,
+an encoding change, an address-planner tweak), run this script — the
+goldens update in the same commit that changes the lowering, never by
+hand.
+
+  PYTHONPATH=src python scripts/regen_golden_models.py [--check]
+
+``--check`` recomputes without writing and exits 1 if any tracked
+snapshot is stale (CI-friendly).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TEST_FILE = os.path.join(REPO, "tests", "test_model_zoo.py")
+
+
+def _load_test_module():
+    """tests/ is not a package; load the module straight off its file
+    so we reuse its golden_model build + paths verbatim."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    spec = importlib.util.spec_from_file_location("_golden_zoo", TEST_FILE)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any tracked snapshot is stale, "
+                         "write nothing")
+    args = ap.parse_args(argv)
+
+    mod = _load_test_module()
+    os.makedirs(mod.GOLDEN_DIR, exist_ok=True)
+    stale = []
+    for name in sorted(mod.MODEL_ZOO):
+        text = mod.golden_model(name).program.disassemble() + "\n"
+        path = mod.golden_path(name)
+        old = None
+        if os.path.exists(path):
+            with open(path) as f:
+                old = f.read()
+        if old == text:
+            print(f"{os.path.relpath(path, REPO)}: up to date")
+            continue
+        stale.append(path)
+        if not args.check:
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"{os.path.relpath(path, REPO)}: "
+                  f"{'rewrote' if old is not None else 'created'} "
+                  f"({len(text.splitlines())} words)")
+    if args.check and stale:
+        print("stale golden microcode snapshots — run "
+              "scripts/regen_golden_models.py:", file=sys.stderr)
+        for p in stale:
+            print(f"  {os.path.relpath(p, REPO)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,15 +180,26 @@ class Assembler:
         for spec in order:
             ins = list(spec.inputs) or ["input"]
             ih, iw, ic = shape_of[ins[0]]
-            if len(ins) > 1:       # concat read: channels sum, H/W match
+            if len(ins) > 1:
                 for p in ins[1:]:
                     ph, pw, pc = shape_of[p]
                     if (ph, pw) != (ih, iw):
                         raise ValueError(
-                            f"concat into {spec.name}: H/W mismatch "
+                            f"{'add' if spec.op == 'add' else 'concat'} "
+                            f"into {spec.name}: H/W mismatch "
                             f"{(ph, pw)} vs {(ih, iw)}"
                         )
-                    ic += pc
+                    if spec.op == "add":
+                        # binary add reads TWO same-shape operands (the
+                        # second via ext_addr2), never a combined extent
+                        # — channels must match, not sum
+                        if pc != ic:
+                            raise ValueError(
+                                f"add into {spec.name}: channel mismatch "
+                                f"{pc} vs {ic}"
+                            )
+                    else:          # concat read: channels sum, H/W match
+                        ic += pc
             in_addr = addr_of[ins[0]]
 
             if spec.op.startswith("ext:") or spec.ext_op is not None:
@@ -216,14 +227,27 @@ class Assembler:
                 tables.append(dict(spec.table))
                 tbl_idx = len(tables)        # 1-based; 0 = no table
 
-            kernel_code = (
-                int(KERNEL_CODES.get(spec.kernel, Kernel.K1))
-                if spec.op != "pool"
-                # pool convention: code 0 -> 2x2, code 1 -> 3x3 (Table II's
-                # kernel field only encodes {1,3,7}; the pool unit treats
-                # code 0 as its native 2x2 window)
-                else (0 if spec.kernel == 2 else 1)
-            )
+            # pool convention: code 0 -> 2x2, code 1 -> 3x3 (Table II's
+            # kernel field only encodes {1,3,7}; the pool unit treats
+            # code 0 as its native 2x2 window).  Anything else must
+            # fail HERE: an unencodable kernel that silently snapped to
+            # a nearby code would assemble fine and compute the wrong
+            # thing.
+            if spec.op == "pool":
+                if spec.kernel not in (2, 3):
+                    raise ValueError(
+                        f"{spec.name}: pool kernel {spec.kernel} not "
+                        f"encodable (the pool unit supports 2x2 and 3x3)"
+                    )
+                kernel_code = 0 if spec.kernel == 2 else 1
+            elif spec.op == "conv" and spec.kernel not in KERNEL_CODES:
+                raise ValueError(
+                    f"{spec.name}: conv kernel {spec.kernel} not "
+                    f"encodable (Table II encodes "
+                    f"{sorted(KERNEL_CODES)})"
+                )
+            else:
+                kernel_code = int(KERNEL_CODES.get(spec.kernel, Kernel.K1))
 
             mc = Microcode(
                 layer_type=int(layer_type),
@@ -278,7 +302,7 @@ class Assembler:
         spec = by_name[name]
         ins = list(spec.inputs) or ["input"]
         h, w, c = self._infer_shape(ins[0], by_name, shape_of)
-        if len(ins) > 1:
+        if len(ins) > 1 and spec.op != "add":      # add: channels match
             for p in ins[1:]:
                 c += self._infer_shape(p, by_name, shape_of)[2]
         return self._out_shape(spec, h, w, c) if not (

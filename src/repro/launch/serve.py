@@ -124,8 +124,12 @@ class STDService:
                  measured_routing: bool = True,
                  precision: str = "f32",
                  postprocess: str = "host",
-                 boxes_capacity: int = 256):
-        from repro.models.fcn.pixellink import PixelLinkModel, STDConfig
+                 boxes_capacity: int = 256,
+                 model: str = "pixellink"):
+        from repro.models.fcn.heads import (
+            DetectionModel, build_head, check_model,
+        )
+        from repro.models.fcn.pixellink import STDConfig
 
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -135,6 +139,18 @@ class STDService:
             )
         if boxes_capacity < 1:
             raise ValueError("boxes_capacity must be >= 1")
+        # which detection head this service routes requests to — every
+        # cache, plan feature, and telemetry series keys on it
+        self.model_name = check_model(model)
+        self.head = build_head(model, score_thr=score_thr,
+                               link_thr=link_thr)
+        if postprocess == "device" and \
+                not self.head.supports_device_postprocess:
+            raise ValueError(
+                f"model {model!r} has no label-map payload, so the "
+                f"device-compact box tail does not apply; use "
+                f"postprocess='host'"
+            )
         # "device" compacts boxes on device (EngineFactory.boxes_fn);
         # named _mode because postprocess() is the stage method
         self.postprocess_mode = postprocess
@@ -177,22 +193,25 @@ class STDService:
         # (MicroBatcher) — metrics_snapshot() exports it all
         self.book = book if book is not None else CostBook()
 
-        def make_model(hw, precision="f32"):
+        def make_model(hw, precision="f32", model="pixellink"):
             # "bfp" runs the paper's quantized datapath: BFP convs with
             # FP16 data-pool storage, Pallas kernels where the backend
             # compiles them (interpret-mode Pallas off the TPU would be
             # orders of magnitude slower than XLA, so it stays off in
-            # serving — the kernels themselves are covered by tests)
+            # serving — the kernels themselves are covered by tests).
+            # The model arg selects the detection head; one factory can
+            # serve several zoo models through the same LRU.
             from repro.core import BFPConfig
 
             bfp = precision == "bfp"
-            return PixelLinkModel(STDConfig(
+            return DetectionModel(STDConfig(
                 backbone="vgg16", width=width, image_size=hw,
                 merge_ch=(16, 16, 8), mode=mode,
                 bfp=BFPConfig() if bfp else None,
                 storage_fp16=bfp,
                 use_pallas=bfp and jax.default_backend() in ("gpu", "tpu"),
-            ))
+            ), build_head(model, score_thr=score_thr,
+                          link_thr=link_thr))
 
         self.factory = EngineFactory(
             make_model,
@@ -201,14 +220,16 @@ class STDService:
             book=self.book,
         )
         if planner is not None:
-            planner.bind_features(self._plan_features)
+            planner.bind_features(self._plan_features,
+                                  model=self.model_name)
             if measured_routing:
                 # overlay measured step EWMAs over the analytic model:
                 # combos the service has actually run route by what they
                 # actually cost, through the same engine LRU — reading
-                # this service's precision's step series
+                # this service's precision's AND model's step series
                 planner.use_measurements(self.book,
-                                         precision=self.precision)
+                                         precision=self.precision,
+                                         model=self.model_name)
         self.stats: Dict[str, Any] = {"n": 0, "latency_s": [],
                                       "transposed": 0, "plan_choices": {},
                                       "nonconverged": 0, "pp_overflow": 0}
@@ -220,10 +241,14 @@ class STDService:
 
     def _plan_features(self, hw: Tuple[int, int]):
         """Cost-model features for one bucket, from the same assembled
-        program the engine will run (planner wiring)."""
-        model = self.factory.model(tuple(hw), self.precision)
+        program the engine will run (planner wiring) — this service's
+        OWN model's microcode, so per-model plan features differ."""
+        model = self.factory.model(tuple(hw), self.precision,
+                                   self.model_name)
         return features_for_program(
-            model.program, self.factory.deepest_stride(tuple(hw))
+            model.program,
+            self.factory.deepest_stride(tuple(hw), self.precision,
+                                        self.model_name),
         )
 
     def _plan_for(self, hw: Tuple[int, int], batch: int = 1) -> ExecutionPlan:
@@ -236,7 +261,8 @@ class STDService:
         default."""
         over_tall = hw[0] > max(self.buckets)
         if self.planner is not None:
-            plan = self.planner.choose(hw, batch, force_banded=over_tall)
+            plan = self.planner.choose(hw, batch, force_banded=over_tall,
+                                       model=self.model_name)
             # routing runs on the dispatch thread while callers read
             # stats — every stats mutation holds _lock
             with self._lock:
@@ -258,7 +284,8 @@ class STDService:
         clamped heights like 192 on an 8-band mesh would be rejected by
         the plan compiler."""
         top = max(self.buckets)
-        deepest = self.factory.deepest_stride((top, top))
+        deepest = self.factory.deepest_stride((top, top), self.precision,
+                                              self.model_name)
         if self.planner is not None:
             unit = self.planner.height_unit(deepest)
         else:
@@ -293,9 +320,10 @@ class STDService:
     def _dispatch(self, stack: np.ndarray,
                   valid_hws: List[Tuple[int, int]]):
         """Route + pad + submit one batch; returns the pending device
-        tuple — ``(labels, converged)`` on the host-postprocess path,
-        ``(labels, converged, rows, counts)`` with the compact on-device
-        boxes on the device path — and the step-telemetry meta
+        tuple — the head's ``(*payload, converged)`` on the
+        host-postprocess path (``(labels, converged)`` for the CC
+        heads), with the compact on-device ``(rows, counts)`` boxes
+        appended on the device path — and the step-telemetry meta
         ``(hw, batch, kind, t0)`` the completion path hands to
         :meth:`_record_step`.  Nothing here blocks: the boxes fn is a
         jitted call on the pending labels, so it joins the same async
@@ -314,19 +342,18 @@ class STDService:
         valid_q = np.zeros((b, 2), np.int32)
         for i, (vh, vw) in enumerate(valid_hws):
             valid_q[i] = (vh // 4, vw // 4)
-        fn = self.factory.plan_fn(hw, b, plan, self.precision)
-        params = self.factory.params(hw, self.precision)
+        fn = self.factory.plan_fn(hw, b, plan, self.precision,
+                                  self.model_name)
+        params = self.factory.params(hw, self.precision, self.model_name)
         t0 = time.perf_counter()
-        labels, converged = fn(params, jnp.asarray(stack),
-                               jnp.asarray(valid_q))
+        pending = fn(params, jnp.asarray(stack), jnp.asarray(valid_q))
         if self.postprocess_mode == "device":
             # labels are already valid-masked, so padding contributes no
             # components; coordinates live in label-map (quarter) space
+            # (single-label-map heads only — enforced at construction)
             rows, counts = self.factory.boxes_fn(
-                hw, b, self.boxes_capacity)(labels)
-            pending = (labels, converged, rows, counts)
-        else:
-            pending = (labels, converged)
+                hw, b, self.boxes_capacity)(pending[0])
+            pending = (*pending, rows, counts)
         return pending, (hw, b, plan_kind(plan), t0)
 
     def _record_step(self, meta) -> None:
@@ -340,7 +367,8 @@ class STDService:
         under load (see "Calibrated routing" in docs/plans.md)."""
         hw, b, kind, t0 = meta
         self.book.record_step(hw, b, kind, time.perf_counter() - t0,
-                              precision=self.precision)
+                              precision=self.precision,
+                              model=self.model_name)
 
     def dispatch_labels(self, stack: np.ndarray,
                         valid_hws: List[Tuple[int, int]]):
@@ -385,10 +413,13 @@ class STDService:
         payloads: a ``(rows, count)`` compact-box tuple per image on the
         device path (falling back to the full label map when the
         component count overflows ``boxes_capacity`` — counted, never
-        wrong), or the label map per image on the host path.  Records
-        the ``stage="step"`` wall and the non-convergence counter."""
+        wrong), or the head's per-image payload on the host path (the
+        label map for the CC heads, a tuple of maps for multi-payload
+        heads like EAST).  Records the ``stage="step"`` wall and the
+        non-convergence counter."""
         pending, meta = raw
-        if len(pending) == 4:
+        n_payload = self.head.n_payload
+        if len(pending) == n_payload + 3:       # device (rows, counts)
             labels, converged, rows, counts = pending
             rows = np.asarray(rows)                  # compact D2H payload
             counts = np.asarray(counts)
@@ -404,47 +435,41 @@ class STDService:
                 else:
                     out.append((rows[i], int(counts[i])))
             return out
-        labels, converged = pending
-        labels = np.asarray(labels)
+        arrs = [np.asarray(a) for a in pending[:n_payload]]
         self._record_step(meta)
-        self._count_nonconverged(np.asarray(converged))
-        return [labels[i] for i in range(labels.shape[0])]
+        self._count_nonconverged(np.asarray(pending[n_payload]))
+        if n_payload == 1:
+            return [arrs[0][i] for i in range(arrs[0].shape[0])]
+        return [tuple(a[i] for a in arrs)
+                for i in range(arrs[0].shape[0])]
 
-    def postprocess(self, labels, valid_hw: Tuple[int, int],
+    def postprocess(self, payload, valid_hw: Tuple[int, int],
                     transposed: bool,
                     bucket_hw: Optional[Tuple[int, int]] = None
                     ) -> List[Dict]:
-        """One image's inference output -> boxes (the serving tail).
+        """One image's inference payload -> boxes (the serving tail).
 
-        Type-dispatches on the payload: a ``(rows, count)`` tuple is the
-        device-compact path (trivial O(capacity) decode), an ndarray is
-        the host path (valid-region crop + single-pass extraction).
-        Either way the per-image wall lands in the CostBook under
-        ``stage="postprocess"`` keyed by the bucket shape (derived from
-        the label plane when ``bucket_hw`` isn't given — the
-        device-compact rows carry no plane, so tuple payloads require
-        it)."""
-        from repro.models.fcn import postprocess as pp
-
+        The head owns the decode (models/fcn/heads.py): the CC heads
+        type-dispatch device-compact ``(rows, count)`` tuples vs label
+        maps, EAST runs its geometry decode + NMS.  The per-image wall
+        lands in the CostBook under ``stage="postprocess"`` keyed by
+        the bucket shape and the head's decode kind (derived from the
+        payload plane when ``bucket_hw`` isn't given — device-compact
+        rows carry no plane, so they require it)."""
         t0 = time.perf_counter()
-        if isinstance(labels, tuple):               # device-compact rows
-            if bucket_hw is None:
+        boxes, kind = self.head.decode(payload, valid_hw)
+        if bucket_hw is None:
+            plane = self.head.payload_plane(payload)
+            if plane is None:
                 raise ValueError(
                     "device-compact payloads carry no plane shape; pass "
                     "bucket_hw"
                 )
-            boxes = pp.boxes_from_compact(labels[0])
-            kind = "device"
-        else:
-            lab = np.asarray(labels)
-            if bucket_hw is None:
-                bucket_hw = (lab.shape[0] * 4, lab.shape[1] * 4)
-            vh, vw = valid_hw[0] // 4, valid_hw[1] // 4
-            boxes = pp.boxes_from_labels(lab[:vh, :vw])
-            kind = "host"
+            bucket_hw = (plane[0] * 4, plane[1] * 4)
         self.book.record_step(tuple(bucket_hw), 1, kind,
                               time.perf_counter() - t0,
-                              stage="postprocess")
+                              stage="postprocess",
+                              model=self.model_name)
         if transposed:                              # inverse transposition
             for b in boxes:
                 x0, y0, x1, y1 = b["box"]
@@ -623,13 +648,18 @@ def main(argv=None):
                     choices=["host", "device"],
                     help="box extraction: host label-map decode or "
                          "on-device compact rows")
+    ap.add_argument("--model", default="pixellink",
+                    choices=["pixellink", "east", "db"],
+                    help="detection head to serve (models/fcn/heads.py "
+                         "MODEL_ZOO)")
     args = ap.parse_args(argv)
 
     from repro.data.images import RequestStream
 
     svc = STDService(width=args.width, mode=args.mode,
                      max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-                     precision=args.precision, postprocess=args.postprocess)
+                     precision=args.precision, postprocess=args.postprocess,
+                     model=args.model)
     images = RequestStream(
         args.requests, seed=0, hw_range=((48, 120), (48, 120))
     ).images()

@@ -1,10 +1,24 @@
 """The paper's own model family: instance-segmentation STD (PixelLink [6]
 + EAST [24] style U-shape FCN) with configurable backbones, assembled to
-microcode and executed by repro.core.FCNEngine."""
-from . import backbones, fusion, pixellink, postprocess
+microcode and executed by repro.core.FCNEngine.  heads.py is the model
+zoo: every detection head compiles through the same assembler seam."""
+from . import backbones, fusion, heads, pixellink, postprocess
+from .heads import (
+    DEFAULT_MODEL,
+    MODEL_ZOO,
+    DBHead,
+    DetectionHead,
+    DetectionModel,
+    EASTHead,
+    PixelLinkHead,
+    build_head,
+    check_model,
+)
 from .pixellink import PixelLinkModel, STDLoss
 
 __all__ = [
-    "backbones", "fusion", "pixellink", "postprocess",
-    "PixelLinkModel", "STDLoss",
+    "backbones", "fusion", "heads", "pixellink", "postprocess",
+    "DEFAULT_MODEL", "MODEL_ZOO", "DBHead", "DetectionHead",
+    "DetectionModel", "EASTHead", "PixelLinkHead", "build_head",
+    "check_model", "PixelLinkModel", "STDLoss",
 ]

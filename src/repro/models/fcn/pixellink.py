@@ -15,11 +15,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Assembler, BFPConfig, FCNEngine, LayerSpec
-from repro.core.assembler import Program
+from repro.core import BFPConfig
 
-from . import backbones as bb
-from . import fusion
+from .heads import DetectionModel, PixelLinkHead
 
 F32 = jnp.float32
 
@@ -39,73 +37,13 @@ class STDConfig:
                                                  # optimized datapath
 
 
-class PixelLinkModel:
+class PixelLinkModel(DetectionModel):
+    """The zoo's ``head=PixelLinkHead()`` special case, kept as a named
+    class for back-compat: apply() returns {score (N,h,w), links
+    (N,h,w,8), logits} exactly as before the DetectionHead refactor."""
+
     def __init__(self, cfg: STDConfig):
-        self.cfg = cfg
-        h, w = cfg.image_size
-        specs, taps = bb.BACKBONES[cfg.backbone](cfg.width)
-        fspecs, fout = fusion.east_merge(
-            taps, cfg.merge_ch, cfg.upsample_mode
-        )
-        hspecs, outs = fusion.pixellink_head(fout)
-        self.program: Program = Assembler((h, w, 3)).assemble(
-            specs + fspecs + hspecs, outputs=outs
-        )
-        self.engine = FCNEngine(
-            self.program,
-            mode=cfg.mode,
-            bfp=cfg.bfp,
-            storage_dtype=jnp.float16 if cfg.storage_fp16 else jnp.float32,
-            use_pallas=cfg.use_pallas,
-        )
-
-    def init_params(self, key):
-        return self.engine.init_params(key)
-
-    def for_plane(self, image_size: Tuple[int, int]) -> "PixelLinkModel":
-        """The same architecture reassembled for another input plane.
-
-        The model is fully convolutional, so parameters transfer 1:1 —
-        this is how the row-band ExecutionPlan builds its per-band
-        program (band + halo rows) while sharing the full-plane weights
-        (runtime/executor.py)."""
-        return PixelLinkModel(
-            dataclasses.replace(self.cfg, image_size=tuple(image_size))
-        )
-
-    def normalize_weights(self, params):
-        """Paper Fig. 4 right branch (BN fold + BFP weight normalization)."""
-        return self.engine.normalize_weights(params)
-
-    def apply(self, params, images, *, transposed: bool = False,
-              band_ctx=None) -> Dict[str, jax.Array]:
-        """images: (N, H, W, 3) -> {score (N,h,w), links (N,h,w,8), logits}.
-
-        Any leading batch size runs through ONE assembled program — the
-        serving scheduler compiles one engine per (bucket, batch) shape.
-        ``transposed=True`` is the paper's §IV.B over-wide mode, threaded
-        down to the engine (kernels transpose, datapath unchanged).
-        ``band_ctx`` is the §IV.B row-band mode: ``images`` is one
-        horizontal band of a taller plane and spatial layers
-        halo-exchange boundary rows (see runtime/executor.py RowBand).
-        """
-        if images.ndim != 4:
-            raise ValueError(
-                f"images must be (N, H, W, 3), got shape {images.shape}"
-            )
-        out = self.engine(params, images, transposed=transposed,
-                          band_ctx=band_ctx)
-        prob = out["head_prob"].astype(F32)
-        return {
-            "logits": out["head_logits"].astype(F32),
-            "score": prob[..., 0],
-            "links": prob[..., 1:],
-        }
-
-    def microcode_bytes(self):
-        from repro.core.microcode import pack_program
-
-        return pack_program(self.program.words)
+        super().__init__(cfg, PixelLinkHead())
 
 
 class STDLoss:
@@ -135,8 +73,12 @@ class STDLoss:
 
         l_l = bce(l_logit, link_gt)
         link_mask = pos[..., None]
+        # masked mean over ELEMENTS: the sum covers all n_links channels
+        # of every positive pixel, so the denominator is positive pixels
+        # x n_links (dividing by positive pixels alone inflates the link
+        # term n_links-fold vs the documented BCE mean)
         link_loss = jnp.sum(l_l * link_mask) / jnp.maximum(
-            jnp.sum(link_mask) * l_logit.shape[-1] / link_gt.shape[-1], 1.0
+            jnp.sum(link_mask) * l_logit.shape[-1], 1.0
         )
         total = score_loss + self.link_weight * link_loss
         return {"loss": total, "score_loss": score_loss,

@@ -46,8 +46,12 @@ async dispatch) only has to add plan types:
     around whichever plan is active.
 
 Plans are frozen, hashable dataclasses: the serving engine LRU keys on
-``(bucket_hw, batch, plan, precision)`` and a mesh or precision change
-is a new compiled engine, never silent reuse.  ``precision`` is the
+``(bucket_hw, batch, plan, precision, model)`` and a mesh, precision, or
+model change is a new compiled engine, never silent reuse.  ``model`` is
+the paper's versatility axis (models/fcn/heads.MODEL_ZOO): every
+detection head compiles through the same assembler -> microcode path,
+and the factory's ``make_model(hw, precision, model)`` builds whichever
+head a request routes to.  ``precision`` is the
 paper's numerics axis (docs/plans.md "Precision modes"): ``"f32"`` runs
 plain float convs, ``"bfp"`` runs BFP-quantized convs with FP16
 data-pool storage and the Pallas kernels where the backend compiles
@@ -78,6 +82,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch.batching import LRUCache
+from repro.models.fcn.heads import DEFAULT_MODEL, check_model
 from repro.runtime.collectives import halo_exchange
 from repro.runtime.sharding import (
     fcn_activation_specs,
@@ -272,9 +277,10 @@ class EngineFactory:
         cc_pallas: Any = None,
     ):
         self.make_model = make_model
-        # legacy make_model(hw) callables take one parameter; the
-        # precision-aware form takes (hw, precision).  Unintrospectable
-        # callables are treated as precision-aware (they can ignore it).
+        # make_model generations: legacy (hw), precision-aware
+        # (hw, precision), model-aware (hw, precision, model).
+        # Unintrospectable callables are treated as model-aware (they
+        # can ignore the extras).
         try:
             n_params = len([
                 p for p in inspect.signature(make_model).parameters.values()
@@ -282,8 +288,8 @@ class EngineFactory:
                 or p.kind == p.VAR_POSITIONAL
             ])
         except (TypeError, ValueError):
-            n_params = 2
-        self._legacy_make_model = n_params < 2
+            n_params = 3
+        self._make_model_arity = min(n_params, 3)
         self.score_thr = score_thr
         self.link_thr = link_thr
         self.book = book
@@ -301,8 +307,14 @@ class EngineFactory:
         self._lock = threading.Lock()
         self.stats: Dict[str, Any] = {"compiled": []}
 
-    def _build_model(self, hw: Tuple[int, int], precision: str):
-        if self._legacy_make_model:
+    def _build_model(self, hw: Tuple[int, int], precision: str, model: str):
+        if self._make_model_arity < 3 and model != DEFAULT_MODEL:
+            raise ValueError(
+                f"make_model {self.make_model!r} is not model-aware; a "
+                f"model-zoo factory needs make_model(hw, precision, "
+                f"model) to build {model!r} engines"
+            )
+        if self._make_model_arity < 2:
             if precision != "f32":
                 raise ValueError(
                     f"make_model {self.make_model!r} takes only (hw); a "
@@ -310,68 +322,80 @@ class EngineFactory:
                     f"precision) to build {precision!r} engines"
                 )
             return self.make_model(hw)
-        return self.make_model(hw, precision)
+        if self._make_model_arity < 3:
+            return self.make_model(hw, precision)
+        return self.make_model(hw, precision, model)
 
     # -- model / param caches --------------------------------------------------
-    def model(self, hw: Tuple[int, int], precision: str = "f32"):
+    def model(self, hw: Tuple[int, int], precision: str = "f32",
+              model: str = DEFAULT_MODEL):
         hw = tuple(hw)
         check_precision(precision)
+        check_model(model)
         with self._lock:
-            m = self._models.get((hw, precision))
+            m = self._models.get((hw, precision, model))
             if m is None:
-                m = self._build_model(hw, precision)
-                self._models.put((hw, precision), m)
+                m = self._build_model(hw, precision, model)
+                self._models.put((hw, precision, model), m)
             return m
 
-    def params(self, hw: Tuple[int, int], precision: str = "f32"):
+    def params(self, hw: Tuple[int, int], precision: str = "f32",
+               model: str = DEFAULT_MODEL):
         """Parameters for one plane — deterministic (PRNGKey(0)), so an
         LRU-evicted entry rebuilds identically.  The bfp entry is the
         f32 entry run through the bfp model's ``normalize_weights``
         (paper Fig. 4: BN fold + BFP weight normalization) — one weight
-        set under both numerics."""
+        set under both numerics.  Per model: heads differ in parameter
+        trees, so the cache keys on (hw, precision, model)."""
         hw = tuple(hw)
         check_precision(precision)
-        model = self.model(hw, precision)
-        raw = self.params(hw, "f32") if precision != "f32" else None
+        check_model(model)
+        model_obj = self.model(hw, precision, model)
+        raw = self.params(hw, "f32", model) if precision != "f32" else None
         with self._lock:
-            p = self._params.get((hw, precision))
+            p = self._params.get((hw, precision, model))
             if p is None:
-                p = (model.init_params(jax.random.PRNGKey(0))
+                p = (model_obj.init_params(jax.random.PRNGKey(0))
                      if precision == "f32"
-                     else model.normalize_weights(raw))
-                self._params.put((hw, precision), p)
+                     else model_obj.normalize_weights(raw))
+                self._params.put((hw, precision, model), p)
             return p
 
-    def deepest_stride(self, hw: Tuple[int, int]) -> int:
+    def deepest_stride(self, hw: Tuple[int, int], precision: str = "f32",
+                       model: str = DEFAULT_MODEL) -> int:
         """Deepest cumulative stride of the program assembled at ``hw``
         (architecture property — plane-independent for divisible planes)."""
-        prog = self.model(tuple(hw)).program
+        prog = self.model(tuple(hw), precision, model).program
         return max(hw[0] // max(h, 1) for h, _, _ in prog.addr_shapes.values())
 
     # -- engines ---------------------------------------------------------------
     def plan_fn(self, hw: Tuple[int, int], batch: int,
-                plan: ExecutionPlan, precision: str = "f32") -> Callable:
-        """The compiled engine for one (bucket, batch, plan, precision)
-        key — a precision change is a different engine, never a cache
-        hit on the other numerics."""
+                plan: ExecutionPlan, precision: str = "f32",
+                model: str = DEFAULT_MODEL) -> Callable:
+        """The compiled engine for one (bucket, batch, plan, precision,
+        model) key — a precision or model change is a different engine,
+        never a cache hit on the other numerics or head."""
         check_precision(precision)
-        key = (tuple(hw), int(batch), plan, precision)
+        check_model(model)
+        key = (tuple(hw), int(batch), plan, precision, model)
         fn = self._engines.get(key)
         if fn is not None:
             return fn
-        fn = self._compile(tuple(hw), int(batch), plan, precision)
+        fn = self._compile(tuple(hw), int(batch), plan, precision, model)
         if self.book is not None:
             fn = self._timed(fn, tuple(hw), int(batch), plan_kind(plan),
-                             precision)
+                             precision, model)
         self.stats["compiled"].append(
             {"hw": tuple(hw), "batch": int(batch),
-             "plan": describe_plan(plan), "precision": precision}
+             "plan": describe_plan(plan), "precision": precision,
+             "model": model}
         )
         self._engines.put(key, fn)
         return fn
 
     def _timed(self, fn: Callable, hw, batch: int, kind: str,
-               precision: str = "f32") -> Callable:
+               precision: str = "f32",
+               model: str = DEFAULT_MODEL) -> Callable:
         """Record each engine call's wall into the telemetry book.
         This measures the DISPATCH side only — engines return pending
         arrays, so blocking here would serialize the async pipeline."""
@@ -380,10 +404,26 @@ class EngineFactory:
             out = fn(params, x, valid_q)
             self.book.record_step(hw, batch, kind,
                                   time.perf_counter() - t0,
-                                  stage="dispatch", precision=precision)
+                                  stage="dispatch", precision=precision,
+                                  model=model)
             return out
 
         return timed
+
+    def _tail(self, model_obj, out, valid_q):
+        """The model's serving tail: named maps -> (*payload, converged).
+        Zoo models carry a DetectionHead that owns the tail (CC labeling
+        for segmentation heads, valid-region masking for regression
+        heads); headless legacy models get the PixelLink CC tail."""
+        head = getattr(model_obj, "head", None)
+        if head is not None:
+            return head.tail(self, out, valid_q)
+        return self._label_tail(out["score"], out["links"], valid_q)
+
+    def label_tail(self, score, links, valid_q):
+        """Public CC-tail entry point for DetectionHead.tail
+        implementations (the shared log-hop labeling machinery)."""
+        return self._label_tail(score, links, valid_q)
 
     def _label_tail(self, score, links, valid_q):
         """Batched CC labeling tail -> (labels, converged) with the
@@ -433,28 +473,32 @@ class EngineFactory:
         self._engines.put(key, fn)
         return fn
 
-    def _compile(self, hw, batch, plan, precision: str = "f32") -> Callable:
+    def _compile(self, hw, batch, plan, precision: str = "f32",
+                 model: str = DEFAULT_MODEL) -> Callable:
         if isinstance(plan, SingleDevice):
-            return self._compile_single(hw, precision)
+            return self._compile_single(hw, precision, model)
         if isinstance(plan, DataParallel):
-            return self._compile_data_parallel(hw, batch, plan, precision)
+            return self._compile_data_parallel(hw, batch, plan, precision,
+                                               model)
         if isinstance(plan, RowBand):
-            return self._compile_row_band(hw, plan, precision)
+            return self._compile_row_band(hw, plan, precision, model)
         if isinstance(plan, GridPlan):
-            return self._compile_grid(hw, batch, plan, precision)
+            return self._compile_grid(hw, batch, plan, precision, model)
         raise TypeError(f"unknown execution plan {plan!r}")
 
-    def _compile_single(self, hw, precision: str = "f32") -> Callable:
-        model = self.model(hw, precision)
+    def _compile_single(self, hw, precision: str = "f32",
+                        model: str = DEFAULT_MODEL) -> Callable:
+        model_obj = self.model(hw, precision, model)
 
         def run(params, x, valid_q):
-            out = model.apply(params, x)
-            return self._label_tail(out["score"], out["links"], valid_q)
+            out = model_obj.apply(params, x)
+            return self._tail(model_obj, out, valid_q)
 
         return jax.jit(run, donate_argnums=_donate_argnums())
 
     def _compile_data_parallel(self, hw, batch, plan,
-                               precision: str = "f32") -> Callable:
+                               precision: str = "f32",
+                               model: str = DEFAULT_MODEL) -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
         if n is None:
             raise ValueError(
@@ -465,20 +509,28 @@ class EngineFactory:
                 f"batch {batch} not divisible by {plan.axis}={n}; round "
                 f"with plan_batch_multiple()"
             )
-        model = self.model(hw, precision)
+        model_obj = self.model(hw, precision, model)
         specs = fcn_activation_specs(batch_axis=plan.axis)
+        head = getattr(model_obj, "head", None)
+        # per-payload out specs: rank-3 payloads (label/score planes)
+        # shard like labels, rank-4 (vector maps) like links
+        ranks = getattr(head, "payload_ranks", (3,))
+        payload_specs = tuple(
+            specs["labels"] if r == 3 else specs["links"] for r in ranks
+        )
 
         def shard(params, x, valid_q):
-            out = model.apply(params, x)
-            return self._label_tail(out["score"], out["links"], valid_q)
+            out = model_obj.apply(params, x)
+            return self._tail(model_obj, out, valid_q)
 
         return jax.jit(shard_map_compat(
             shard, plan.mesh,
             in_specs=(P(), specs["image"], P(plan.axis)),
-            out_specs=(specs["labels"], P(plan.axis)),
+            out_specs=(*payload_specs, P(plan.axis)),
         ), donate_argnums=_donate_argnums())
 
-    def _compile_row_band(self, hw, plan, precision: str = "f32") -> Callable:
+    def _compile_row_band(self, hw, plan, precision: str = "f32",
+                          model: str = DEFAULT_MODEL) -> Callable:
         n = mesh_axis_sizes(plan.mesh).get(plan.axis)
         if n is None:
             raise ValueError(
@@ -490,10 +542,11 @@ class EngineFactory:
                 f"bands={plan.bands} must equal mesh axis {plan.axis}={n}"
             )
         return self._compile_banded(plan.mesh, hw, bands, plan.axis,
-                                    precision=precision)
+                                    precision=precision, model=model)
 
     def _compile_banded(self, mesh, hw, bands: int, model_axis: str,
-                        batch_axis=None, precision: str = "f32") -> Callable:
+                        batch_axis=None, precision: str = "f32",
+                        model: str = DEFAULT_MODEL) -> Callable:
         """The shared row-banded engine: each device runs the SAME
         program assembled at the band plane, and every spatial layer
         halo-exchanges its own boundary rows along ``model_axis``
@@ -501,33 +554,41 @@ class EngineFactory:
         With ``batch_axis`` the batch dim is sharded too (GridPlan);
         halo exchange still moves along ``model_axis`` only."""
         W = hw[1]
-        band_h = self._band_height(hw, bands)
-        model = self.model(hw, precision)
-        band_model = (model.for_plane((band_h, W))
-                      if hasattr(model, "for_plane")
-                      else self._build_model((band_h, W), precision))
+        band_h = self._band_height(hw, bands, precision, model)
+        model_obj = self.model(hw, precision, model)
+        band_model = (model_obj.for_plane((band_h, W))
+                      if hasattr(model_obj, "for_plane")
+                      else self._build_model((band_h, W), precision, model))
         ctx = _BandCtx(model_axis, bands)
         specs = fcn_activation_specs(
             batch_axis=batch_axis, rows_axis=model_axis
         )
+        head = getattr(model_obj, "head", None)
+        # the shard body returns the head's named maps; rank-3 maps
+        # (per-pixel scalars) shard like score, rank-4 like links
+        maps = getattr(head, "maps", (("score", 3), ("links", 4)))
+        map_specs = tuple(
+            specs["score"] if r == 3 else specs["links"] for _, r in maps
+        )
 
         def shard(params, x):
             out = band_model.apply(params, x, band_ctx=ctx)
-            return out["score"], out["links"]
+            return tuple(out[n] for n, _ in maps)
 
         sm = shard_map_compat(
             shard, mesh,
             in_specs=(P(), specs["image"]),
-            out_specs=(specs["score"], specs["links"]),
+            out_specs=map_specs,
         )
 
         def run(params, x, valid_q):
-            score, links = sm(params, x)
-            return self._label_tail(score, links, valid_q)
+            out = dict(zip((n for n, _ in maps), sm(params, x)))
+            return self._tail(model_obj, out, valid_q)
 
         return jax.jit(run, donate_argnums=_donate_argnums())
 
-    def _band_height(self, hw, bands: int) -> int:
+    def _band_height(self, hw, bands: int, precision: str = "f32",
+                     model: str = DEFAULT_MODEL) -> int:
         """Validated per-band height for splitting plane ``hw`` into
         ``bands`` rows: the band must divide evenly through the whole
         stride pyramid so every device's local rows stay integral at the
@@ -536,7 +597,7 @@ class EngineFactory:
         if H % bands:
             raise ValueError(f"H={H} not divisible into {bands} bands")
         band_h = H // bands
-        deepest = self.deepest_stride(hw)
+        deepest = self.deepest_stride(hw, precision, model)
         if band_h % deepest:
             raise ValueError(
                 f"band height {band_h} must be a multiple of the deepest "
@@ -545,7 +606,8 @@ class EngineFactory:
         return band_h
 
     def _compile_grid(self, hw, batch, plan: GridPlan,
-                      precision: str = "f32") -> Callable:
+                      precision: str = "f32",
+                      model: str = DEFAULT_MODEL) -> Callable:
         """DataParallel x RowBand composed in one shard_map: batch over
         ``data_axis``, rows over ``model_axis``, per-layer halo exchange
         along ``model_axis`` only."""
@@ -574,7 +636,7 @@ class EngineFactory:
             )
         return self._compile_banded(
             plan.mesh, hw, bands, plan.model_axis,
-            batch_axis=plan.data_axis, precision=precision,
+            batch_axis=plan.data_axis, precision=precision, model=model,
         )
 
     # -- introspection ---------------------------------------------------------

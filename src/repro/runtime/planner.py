@@ -57,6 +57,7 @@ from jax.sharding import Mesh
 
 from repro.launch.mesh import ICI_BW_PER_LINK, N_ICI_LINKS, PEAK_FLOPS_BF16
 from repro.runtime.executor import (
+    DEFAULT_MODEL,
     DataParallel,
     ExecutionPlan,
     GridPlan,
@@ -176,7 +177,8 @@ class MeasuredCost:
 
     def __init__(self, book, fallback: Optional[CostProvider] = None, *,
                  min_observations: int = MIN_OBSERVATIONS,
-                 stage: str = "step", precision: str = "f32"):
+                 stage: str = "step", precision: str = "f32",
+                 model: str = DEFAULT_MODEL):
         if min_observations < 1:
             raise ValueError("min_observations must be >= 1")
         self.book = book
@@ -185,18 +187,22 @@ class MeasuredCost:
         self.min_observations = min_observations
         self.stage = stage
         # which numerics' walls this overlay reads — a bfp service must
-        # route on bfp step times, never the f32 series
+        # route on bfp step times, never the f32 series — and which
+        # detection model's (the heads' FLOP profiles differ)
         self.precision = precision
+        self.model = model
 
     def step_cost(self, features: PlanFeatures, hw: Tuple[int, int],
                   kind: str, batch: int, *, data_n: int,
                   model_n: int) -> float:
         if self.book.step_count(
                 hw, batch, kind, stage=self.stage,
-                precision=self.precision) >= self.min_observations:
+                precision=self.precision,
+                model=self.model) >= self.min_observations:
             measured = self.book.step_ewma(hw, batch, kind,
                                            stage=self.stage,
-                                           precision=self.precision)
+                                           precision=self.precision,
+                                           model=self.model)
             if measured is not None:
                 return measured
         return self.fallback.step_cost(features, hw, kind, batch,
@@ -284,8 +290,15 @@ class Planner:
         self.cost: CostProvider = (
             cost if cost is not None
             else AnalyticCost(params or CostParams()))
-        self._features_fn = features_fn
-        self._features: Dict[Tuple[int, int], PlanFeatures] = {}
+        # feature sources and memos are PER MODEL: the zoo's heads have
+        # very different FLOP/channel profiles, so each model's features
+        # are re-derived from its own assembled microcode
+        self._features_fns: Dict[str, Callable[[Tuple[int, int]],
+                                               PlanFeatures]] = {}
+        if features_fn is not None:
+            self._features_fns[DEFAULT_MODEL] = features_fn
+        self._features: Dict[Tuple[Tuple[int, int], str],
+                             PlanFeatures] = {}
 
     @property
     def params(self) -> CostParams:
@@ -303,41 +316,48 @@ class Planner:
     def use_measurements(self, book, *,
                          min_observations: int =
                          MeasuredCost.MIN_OBSERVATIONS,
-                         precision: str = "f32") -> "Planner":
+                         precision: str = "f32",
+                         model: str = DEFAULT_MODEL) -> "Planner":
         """Overlay a telemetry CostBook over the current provider:
         combos with >= min_observations measured steps route by their
         EWMA wall time, the rest keep the current (analytic) costs.
         ``precision`` selects which numerics' step series the overlay
-        reads (a bfp service routes on bfp walls).  Idempotent per
-        (book, precision) — re-wiring the same pair is a no-op."""
+        reads (a bfp service routes on bfp walls) and ``model`` which
+        head's.  Idempotent per (book, precision, model) — re-wiring
+        the same triple is a no-op."""
         if (isinstance(self.cost, MeasuredCost) and self.cost.book is book
-                and self.cost.precision == precision):
+                and self.cost.precision == precision
+                and self.cost.model == model):
             return self
         self.cost = MeasuredCost(book, fallback=self.cost,
                                  min_observations=min_observations,
-                                 precision=precision)
+                                 precision=precision, model=model)
         return self
 
     def bind_features(
         self, features_fn: Callable[[Tuple[int, int]], PlanFeatures],
+        model: str = DEFAULT_MODEL,
     ) -> "Planner":
-        """Late-bind the feature source (idempotent: an explicit
-        constructor-time features_fn wins)."""
-        if self._features_fn is None:
-            self._features_fn = features_fn
+        """Late-bind one model's feature source (idempotent per model:
+        the first binding — incl. a constructor-time features_fn for the
+        default model — wins)."""
+        if model not in self._features_fns:
+            self._features_fns[model] = features_fn
         return self
 
-    def features(self, hw: Tuple[int, int]) -> PlanFeatures:
+    def features(self, hw: Tuple[int, int],
+                 model: str = DEFAULT_MODEL) -> PlanFeatures:
         hw = tuple(hw)
-        f = self._features.get(hw)
+        f = self._features.get((hw, model))
         if f is None:
-            if self._features_fn is None:
+            fn = self._features_fns.get(model)
+            if fn is None:
                 raise RuntimeError(
-                    "Planner has no features_fn; pass one at construction "
-                    "or call bind_features()"
+                    f"Planner has no features_fn for model {model!r}; "
+                    f"pass one at construction or call bind_features()"
                 )
-            f = self._features_fn(hw)
-            self._features[hw] = f
+            f = fn(hw)
+            self._features[(hw, model)] = f
         return f
 
     def height_unit(self, deepest_stride: int) -> int:
@@ -345,9 +365,10 @@ class Planner:
         multiple of this (bands x deepest stride)."""
         return max(self.model_n, 1) * deepest_stride
 
-    def costs(self, hw: Tuple[int, int], batch: int) -> Dict[str, float]:
+    def costs(self, hw: Tuple[int, int], batch: int,
+              model: str = DEFAULT_MODEL) -> Dict[str, float]:
         """The per-kind cost table for one bucket (bench introspection)."""
-        f = self.features(hw)
+        f = self.features(hw, model)
         return {
             k: self.cost.step_cost(f, hw, k, batch, data_n=self.data_n,
                                    model_n=self.model_n)
@@ -357,8 +378,9 @@ class Planner:
         }
 
     def choose(self, hw: Tuple[int, int], batch: int, *,
-               force_banded: bool = False) -> ExecutionPlan:
-        kind = choose_kind(self.features(hw), hw, batch,
+               force_banded: bool = False,
+               model: str = DEFAULT_MODEL) -> ExecutionPlan:
+        kind = choose_kind(self.features(hw, model), hw, batch,
                            data_n=self.data_n, model_n=self.model_n,
                            cost=self.cost, force_banded=force_banded)
         return self.plan_for_kind(kind)

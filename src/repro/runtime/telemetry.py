@@ -108,9 +108,9 @@ class CostBook:
         # ``warmup`` samples per (combo, stage)
         self.warmup = warmup
         self._lock = threading.Lock()
-        # step series key: (StepKey, stage, precision)
-        self._steps: Dict[Tuple[StepKey, str, str], _Series] = {}
-        self._warm: Dict[Tuple[StepKey, str, str], int] = {}
+        # step series key: (StepKey, stage, precision, model)
+        self._steps: Dict[Tuple[StepKey, str, str, str], _Series] = {}
+        self._warm: Dict[Tuple[StepKey, str, str, str], int] = {}
         self._series: Dict[str, _Series] = {}
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
@@ -122,15 +122,18 @@ class CostBook:
     # -- writers ---------------------------------------------------------------
     def record_step(self, hw: Tuple[int, int], batch: int, kind: str,
                     seconds: float, *, stage: str = "step",
-                    precision: str = "f32") -> None:
+                    precision: str = "f32",
+                    model: str = "pixellink") -> None:
         """One engine step's wall time for a (bucket, batch, plan_kind)
         combo.  ``stage="dispatch"`` is the non-blocking engine-call
         wall (executor); ``stage="step"`` is dispatch through
         materialization (the routing-relevant one — MeasuredCost reads
         it).  ``precision`` keeps f32 and bfp walls in separate series
         (per-precision engines compile separately and run different
-        kernels)."""
-        key = (self._step_key(hw, batch, kind), stage, str(precision))
+        kernels); ``model`` does the same across the detection zoo (the
+        heads have very different FLOP profiles)."""
+        key = (self._step_key(hw, batch, kind), stage, str(precision),
+               str(model))
         with self._lock:
             warm = self._warm.get(key, 0)
             if warm < self.warmup:
@@ -161,44 +164,54 @@ class CostBook:
 
     # -- readers ---------------------------------------------------------------
     def step_count(self, hw, batch, kind, *, stage: str = "step",
-                   precision: str = "f32") -> int:
-        key = (self._step_key(hw, batch, kind), stage, str(precision))
+                   precision: str = "f32",
+                   model: str = "pixellink") -> int:
+        key = (self._step_key(hw, batch, kind), stage, str(precision),
+               str(model))
         with self._lock:
             s = self._steps.get(key)
             return s.count if s is not None else 0
 
     def step_ewma(self, hw, batch, kind, *, stage: str = "step",
-                  precision: str = "f32") -> Optional[float]:
-        key = (self._step_key(hw, batch, kind), stage, str(precision))
+                  precision: str = "f32",
+                  model: str = "pixellink") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage, str(precision),
+               str(model))
         with self._lock:
             s = self._steps.get(key)
             return s.ewma if s is not None else None
 
     def step_percentile(self, hw, batch, kind, q: float, *,
                         stage: str = "step",
-                        precision: str = "f32") -> Optional[float]:
-        key = (self._step_key(hw, batch, kind), stage, str(precision))
+                        precision: str = "f32",
+                        model: str = "pixellink") -> Optional[float]:
+        key = (self._step_key(hw, batch, kind), stage, str(precision),
+               str(model))
         with self._lock:
             s = self._steps.get(key)
             return s.percentile(q) if s is not None else None
 
     def step_total(self, hw, batch, kind, *, stage: str = "step",
-                   precision: str = "f32") -> float:
+                   precision: str = "f32",
+                   model: str = "pixellink") -> float:
         """Cumulative wall seconds for one combo — the busy-time view
         (e.g. summing ``stage="postprocess"`` walls across buckets gives
         each postprocess mode's total tail cost in an A/B)."""
-        key = (self._step_key(hw, batch, kind), stage, str(precision))
+        key = (self._step_key(hw, batch, kind), stage, str(precision),
+               str(model))
         with self._lock:
             s = self._steps.get(key)
             return s.total if s is not None else 0.0
 
     def step_keys(self, *, stage: str = "step",
-                  precision: str = "f32") -> List[StepKey]:
+                  precision: str = "f32",
+                  model: str = "pixellink") -> List[StepKey]:
         """Every (hw, batch, kind) combo with at least one sample at
-        this (stage, precision)."""
+        this (stage, precision, model)."""
         with self._lock:
-            return sorted(k for k, st, pr in self._steps
-                          if st == stage and pr == precision)
+            return sorted(k for k, st, pr, md in self._steps
+                          if st == stage and pr == precision
+                          and md == model)
 
     def counter(self, name: str) -> float:
         with self._lock:
@@ -216,14 +229,17 @@ class CostBook:
         stage="step"}``."""
         out: Dict[str, float] = {}
         with self._lock:
-            for ((hw, batch, kind), stage, precision), s in sorted(
+            for ((hw, batch, kind), stage, precision, model), s in sorted(
                     self._steps.items()):
-                # f32 keeps the historical label shape; other precisions
-                # append their own label so scrapers can tell them apart
+                # the f32/pixellink defaults keep the historical label
+                # shape; other precisions/models append their own labels
+                # so scrapers can tell them apart
                 prec = ("" if precision == "f32"
                         else f',precision="{precision}"')
+                mdl = ("" if model == "pixellink"
+                       else f',model="{model}"')
                 lbl = (f'{{bucket="{hw[0]}x{hw[1]}",batch="{batch}",'
-                       f'plan="{kind}",stage="{stage}"{prec}}}')
+                       f'plan="{kind}",stage="{stage}"{prec}{mdl}}}')
                 out[f"{prefix}step_count{lbl}"] = float(s.count)
                 if s.ewma is not None:
                     out[f"{prefix}step_ewma_s{lbl}"] = s.ewma

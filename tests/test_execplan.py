@@ -39,10 +39,11 @@ class TestPlanKeyedLRU:
     def _stub_factory(self, capacity):
         from repro.runtime.executor import EngineFactory
 
-        fac = EngineFactory(lambda hw, precision="f32": None,
-                            capacity=capacity)
-        fac._compile = (lambda hw, batch, plan, precision="f32":
-                        ("engine", hw, batch, plan, precision))
+        fac = EngineFactory(lambda hw, precision="f32", model="pixellink":
+                            None, capacity=capacity)
+        fac._compile = (
+            lambda hw, batch, plan, precision="f32", model="pixellink":
+            ("engine", hw, batch, plan, precision, model))
         return fac
 
     def test_keyed_on_bucket_batch_plan(self, unit_mesh):

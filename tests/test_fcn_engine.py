@@ -195,3 +195,107 @@ class TestPostprocess:
         assert fm["f_measure"] == 1.0
         fm2 = pp.f_measure(boxes, [(0, 0, 1, 1)])
         assert fm2["f_measure"] < 0.5
+
+
+class TestAssemblerAddOp:
+    """Regressions for the add-op channel-summing bug: a binary ``add``
+    reads two SAME-shape operands (second via ext_addr2), so its word's
+    in_ch is one operand's channel count — the concat path used to sum
+    them, corrupting the word and every downstream reader."""
+
+    def _residual_program(self, outputs=("c3",)):
+        specs = [
+            LayerSpec("c1", "conv", ["input"], out_ch=8, kernel=3,
+                      relu=True),
+            LayerSpec("c2", "conv", ["c1"], out_ch=8, kernel=1),
+            LayerSpec("a", "add", ["c2", "c1"], relu=True),
+            LayerSpec("c3", "conv", ["a"], out_ch=4, kernel=1),
+        ]
+        return Assembler((16, 16, 3)).assemble(specs,
+                                               outputs=list(outputs))
+
+    def test_add_word_channels_not_summed(self):
+        prog = self._residual_program()
+        by = {prog.layer_specs[i].name: w
+              for i, w in enumerate(prog.words)}
+        add, c1, c3 = by["a"], by["c1"], by["c3"]
+        assert add.in_ch == 8                 # bug summed this to 16
+        assert add.out_ch == 8
+        assert prog.addr_shapes[add.out_addr] == (16, 16, 8)
+        # second operand rides in the ext page by address, not channels
+        assert add.ext_addr2 == c1.out_addr
+        assert c3.in_ch == 8                  # downstream consumer too
+
+    def test_add_channel_mismatch_rejected(self):
+        specs = [
+            LayerSpec("c1", "conv", ["input"], out_ch=8, kernel=1),
+            LayerSpec("c2", "conv", ["input"], out_ch=4, kernel=1),
+            LayerSpec("a", "add", ["c1", "c2"]),
+        ]
+        with pytest.raises(ValueError, match="channel mismatch"):
+            Assembler((8, 8, 3)).assemble(specs, outputs=["a"])
+
+    def test_add_numerics_through_engine(self):
+        """Interpreter check: the add ext op must compute relu(x + y)
+        of its two operands, which only holds once the word carries the
+        un-summed channel count."""
+        prog = self._residual_program(outputs=("c1", "c2", "a"))
+        eng = FCNEngine(prog)
+        params = eng.init_params(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+        out = eng(params, x)
+        assert out["a"].shape == (1, 16, 16, 8)
+        np.testing.assert_allclose(
+            np.asarray(out["a"]),
+            np.maximum(np.asarray(out["c1"]) + np.asarray(out["c2"]), 0),
+            atol=1e-5,
+        )
+
+
+class TestKernelEncodingValidation:
+    """Regressions for the silent kernel-snapping bug: unencodable
+    kernels must raise at assembly, not quietly become a different
+    hardware op."""
+
+    def _pool(self, k):
+        specs = [LayerSpec("p", "pool", ["input"], kernel=k, stride=2)]
+        return Assembler((8, 8, 3)).assemble(specs, outputs=["p"])
+
+    def test_pool_kernel_codes(self):
+        # Table II pool convention: code 0 -> 2x2, code 1 -> 3x3
+        assert self._pool(2).words[0].kernel == 0
+        assert self._pool(3).words[0].kernel == 1
+
+    def test_pool_kernel_unencodable_raises(self):
+        with pytest.raises(ValueError, match="pool kernel 5"):
+            self._pool(5)
+
+    def test_conv_kernel_unencodable_raises(self):
+        specs = [LayerSpec("c", "conv", ["input"], out_ch=4, kernel=5)]
+        with pytest.raises(ValueError, match="conv kernel 5"):
+            Assembler((8, 8, 3)).assemble(specs, outputs=["c"])
+
+
+class TestSTDLossNormalization:
+    def test_link_loss_matches_masked_mean_oracle(self):
+        """Regression for the link-loss denominator bug: the masked
+        BCE sum covers n_links channels of every positive pixel, so the
+        mean divides by sum(mask) * n_links — dividing by sum(mask)
+        alone inflated the link term 8-fold."""
+        from repro.models.fcn import STDLoss
+
+        rng = np.random.default_rng(7)
+        logits = rng.normal(size=(2, 8, 8, 9)).astype(np.float32)
+        score_gt = (rng.random((2, 8, 8)) > 0.6).astype(np.float32)
+        link_gt = (rng.random((2, 8, 8, 8)) > 0.5).astype(np.float32)
+        assert score_gt.sum() > 0
+        losses = STDLoss()({"logits": jnp.asarray(logits)},
+                           jnp.asarray(score_gt), jnp.asarray(link_gt))
+
+        lg = logits[..., 1:]
+        bce = (np.maximum(lg, 0) - lg * link_gt
+               + np.log1p(np.exp(-np.abs(lg))))
+        mask = (score_gt > 0.5).astype(np.float32)[..., None]
+        want = (bce * mask).sum() / (mask.sum() * lg.shape[-1])
+        assert float(losses["link_loss"]) == pytest.approx(want,
+                                                           rel=1e-5)

@@ -309,10 +309,18 @@ class TestPlanner:
             Planner(unit_mesh).choose((64, 64), 1)
 
     def test_bind_features_is_idempotent(self, unit_mesh):
+        from repro.runtime.executor import DEFAULT_MODEL
+
         first = lambda hw: tall_features(hw[0], hw[1])
         p = Planner(unit_mesh, first)
         p.bind_features(lambda hw: (_ for _ in ()).throw(AssertionError))
-        assert p._features_fn is first
+        assert p._features_fns[DEFAULT_MODEL] is first
+        # per-model: another model's source binds alongside, first wins
+        other = lambda hw: tall_features(hw[0], hw[1])
+        p.bind_features(other, model="east")
+        p.bind_features(lambda hw: (_ for _ in ()).throw(AssertionError),
+                        model="east")
+        assert p._features_fns["east"] is other
 
     def test_plan_for_kind_mapping(self, unit_mesh):
         from repro.runtime.executor import (DataParallel, GridPlan,
