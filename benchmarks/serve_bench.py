@@ -48,6 +48,19 @@ within an eps accuracy budget of f32 AND the recovered boxes match
 exactly once pixels inside the eps margin of the 0.5 threshold are
 excluded — confident disagreements fail the run.
 
+fleet A/B (``--replicas N --router round_robin p99 least_loaded``) —
+the pod-scale sweep: N replicated services, each with its own
+replica-labelled CostBook, behind a launch/router.Router; ONE seeded
+request stream (alternating interactive/batch deadline classes) runs
+once per named routing policy, and the report carries a per-policy
+``--router`` axis: TPS, p50/p99 request latency, placements per
+replica, sheds per deadline class, and how many replicas the online
+refit re-calibrated from their live books.  One host makes the
+replicas homogeneous, so policies should land within noise of each
+other here — the heterogeneous-fleet separations (p99 routing beating
+round robin on tail latency, batch shedding before interactive) are
+pinned deterministically on a FakeClock in tests/test_router.py.
+
 postprocess A/B (``--postprocess device``) — the serving-tail sweep:
 serve one seeded request stream through a host-postprocess and a
 device-postprocess service (identical weights and routing), gate on
@@ -68,6 +81,8 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_bench --requests 32
           --cost-params /tmp/cost.json
       PYTHONPATH=src python -m benchmarks.serve_bench --precision bfp \
           --buckets 64 --width 0.125 --max-batch 4
+      PYTHONPATH=src python -m benchmarks.serve_bench --replicas 2 \
+          --router round_robin p99 --buckets 64 --width 0.125
 """
 from __future__ import annotations
 
@@ -632,6 +647,129 @@ def run_model_zoo(models, *, requests: int = 8, width: float = 0.25,
     return out
 
 
+def run_fleet_ab(policies, *, replicas: int = 2, requests: int = 16,
+                 width: float = 0.25, buckets=(64,), max_batch: int = 4,
+                 max_wait_ms: float = 8.0, seed: int = 0,
+                 max_outstanding: int = 0, verbose: bool = True):
+    """Replicated-serving A/B (docs/serving.md "Fleet"): ONE seeded
+    request stream through ``replicas`` STDServices behind a
+    launch/router.Router, once per routing policy — the ``--router``
+    axis of the report.
+
+    The fleet is built once and reused across policies (compiles are a
+    one-time deployment cost; every engine the scheduler can form is
+    warmed up front), so later policies also run on books the earlier
+    passes populated — exactly the telemetry the p99 policy scores on.
+    Requests alternate interactive/batch deadline classes; with
+    ``max_outstanding`` 0 admission is unbounded (no sheds), a positive
+    bound exercises the batch-sheds-first policy.  After each pass the
+    router's online refit runs once against every replica's live book
+    (each replica carries a single-device planner, so the fit swaps in
+    without changing what ran)."""
+    from repro.data.images import RequestStream
+    from repro.launch.batching import LatencyRecorder, QueueFull, round_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.router import POLICIES, Router, ServiceReplica
+    from repro.launch.serve import STDService
+    from repro.runtime.fault_tolerance import Watchdog
+    from repro.runtime.planner import Planner
+    from repro.runtime.telemetry import CostBook
+
+    if requests < 1:
+        raise SystemExit("--requests must be >= 1")
+    if replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    policies = list(dict.fromkeys(policies))      # dedupe, keep order
+    for p in policies:
+        if p not in POLICIES:
+            raise SystemExit(f"unknown --router policy {p!r}; "
+                             f"expected one of {POLICIES}")
+    images = RequestStream(
+        requests, seed=seed,
+        hw_range=((48, max(buckets)), (48, max(buckets))),
+    ).images()
+
+    fleet = []
+    for i in range(replicas):
+        # a (1, 1) mesh keeps routing on single_device while still
+        # giving the replica a planner for the online refit to update
+        planner = Planner(make_host_mesh((1, 1), ("data", "model")))
+        svc = STDService(width=width, buckets=tuple(buckets),
+                         max_batch=max_batch, max_wait_ms=max_wait_ms,
+                         engine_cache_capacity=0, book=CostBook(warmup=0),
+                         planner=planner, measured_routing=False)
+        # warm every pow2 (bucket, batch) engine the scheduler can form
+        # (same reasoning as bench_open_loop: steady state is the
+        # measurement)
+        shapes = {svc.preprocess(img)[0].shape[:2] for img in images}
+        sizes = {round_batch(n, max_batch)
+                 for n in range(1, max_batch + 1)}
+        for b in sorted(sizes):
+            for hw in shapes:
+                svc.infer_labels(
+                    np.zeros((b, hw[0], hw[1], 3), np.float32),
+                    [(hw[0], hw[1])] * b,
+                )
+        # health exclusion stays out of the on-host smoke: real-clock
+        # jitter (GC, compile cache misses) must not bench one replica
+        # out of a homogeneous fleet mid-measurement
+        fleet.append(ServiceReplica(
+            f"r{i}", svc,
+            watchdog=Watchdog(threshold=float("inf"), ema=0.5,
+                              warmup_steps=0)))
+
+    out = {}
+    for policy in policies:
+        router = Router(fleet, policy=policy,
+                        max_outstanding=max_outstanding)
+        rec = LatencyRecorder()
+        shed = 0
+        with router:
+            t0 = time.perf_counter()
+            futs = []
+            for i, img in enumerate(images):
+                cls = "interactive" if i % 2 == 0 else "batch"
+                try:
+                    fut = router.submit(img, deadline_class=cls)
+                except QueueFull:
+                    shed += 1
+                    continue
+                futs.append(rec.track(fut, t0=time.perf_counter()))
+            for f in futs:
+                f.result(timeout=600)
+            rec.wait()
+            wall = time.perf_counter() - t0
+            refit = router.refit_now()
+        out[policy] = {
+            "tps": len(futs) / wall if wall > 0 else 0.0,
+            "p50_ms": _pctl(rec.samples, 50),
+            "p99_ms": _pctl(rec.samples, 99),
+            "placed": dict(router.stats["placed"]),
+            "shed": dict(router.stats["shed"]),
+            "submitted": dict(router.stats["submitted"]),
+            "refit_replicas": sorted(refit),
+        }
+        if verbose:
+            r = out[policy]
+            placed = "/".join(f"{k}={v}"
+                              for k, v in sorted(r["placed"].items()))
+            print(f"fleet_ab,router={policy},replicas={replicas},"
+                  f"tps {r['tps']:.2f},"
+                  f"p50 {r['p50_ms']:.1f} ms,p99 {r['p99_ms']:.1f} ms,"
+                  f"placed {placed},"
+                  f"shed int={r['shed']['interactive']}"
+                  f"/batch={r['shed']['batch']},"
+                  f"refit={len(r['refit_replicas'])} replicas")
+    if verbose:
+        # the aggregated scrape: one flat surface for the whole fleet,
+        # per-replica series disjoint via the book labels
+        snap = Router(fleet, policy=policies[-1]).metrics_snapshot()
+        per_replica = sum(1 for k in snap if 'replica="' in k)
+        print(f"fleet_metrics,series={len(snap)},"
+              f"replica_labelled={per_replica}")
+    return out
+
+
 def bench_serving(requests: int = 32, width: float = 0.25,
                   buckets=(64, 128), max_batch: int = 8,
                   max_wait_ms: float = 8.0, seed: int = 0,
@@ -897,6 +1035,17 @@ def main(argv=None):
                     help="device-postprocess compact-rows capacity "
                          "(components past it fall back to the host "
                          "path per image)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run the fleet A/B sweep ONLY: N replicated "
+                         "services behind launch/router.Router, one "
+                         "seeded stream per --router policy; "
+                         "--max-pending bounds router admission "
+                         "(0 = unbounded)")
+    ap.add_argument("--router", nargs="+",
+                    default=["round_robin", "p99"],
+                    choices=["round_robin", "p99", "least_loaded"],
+                    help="routing policies the fleet A/B sweeps (the "
+                         "--router axis of the report)")
     ap.add_argument("--model", nargs="+", default=None,
                     choices=["pixellink", "east", "db"],
                     help="run the model-zoo sweep ONLY: for each named "
@@ -906,6 +1055,16 @@ def main(argv=None):
                          "then smoke-serve the stream through its "
                          "compiled engines")
     args = ap.parse_args(argv)
+    if args.replicas:
+        return run_fleet_ab(args.router,
+                            replicas=args.replicas,
+                            requests=args.requests,
+                            width=args.width,
+                            buckets=tuple(args.buckets),
+                            max_batch=args.max_batch,
+                            max_wait_ms=args.max_wait_ms,
+                            seed=args.seed,
+                            max_outstanding=args.max_pending)
     if args.model:
         return run_model_zoo(args.model,
                              requests=args.requests,

@@ -96,6 +96,19 @@ python scripts/regen_golden_models.py --check
 python -m benchmarks.serve_bench --model pixellink east db \
   --width 0.125 --buckets 64 --max-batch 2 --requests 6
 
+echo "== tier-2: fleet router — deterministic multi-replica sim + serve_bench --replicas smoke =="
+# The pod-scale serving suite: FakeClock fleet sim pinning p99-vs-round-
+# robin tail separation, batch-sheds-before-interactive admission, the
+# online refit flipping a routing decision without restart, and replica
+# health exclusion/recovery — plus a tiny serve_bench --replicas A/B
+# proving two real replicated services route, refit, and aggregate one
+# labelled scrape end to end.  The suite also runs in the fast tiers;
+# this stage keeps it failing loudly under path args.
+python -m pytest -q tests/test_router.py
+python -m benchmarks.serve_bench --replicas 2 \
+  --router round_robin p99 \
+  --width 0.125 --buckets 64 --max-batch 2 --requests 8
+
 echo "== tier-2: slow distributed/serving tests on a multi-device host mesh =="
 # The pytest process itself sees 8 host CPU devices, activating any
 # in-process multi-device tests; subprocess-based tests override

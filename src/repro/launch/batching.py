@@ -60,7 +60,13 @@ class LatencyRecorder:
     the final ``result()`` return.  ``track(fut)`` registers a callback
     that appends the sample and releases a semaphore; ``wait()``
     acquires once per tracked future, so when it returns every sample
-    has landed — no sleep loop, no truncated tail percentiles."""
+    has landed — no sleep loop, no truncated tail percentiles.
+
+    Done-callbacks run on whichever thread resolves the future
+    (mb-post workers, completion stage, ...), so ``samples`` is a
+    shared list: appends happen under ``_lock``, and ``wait()`` returns
+    a snapshot copied under the same lock — callers can sort/percentile
+    the return value while later-tracked futures keep resolving."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.samples: List[float] = []
@@ -75,14 +81,19 @@ class LatencyRecorder:
         t = self._clock() if t0 is None else t0
         with self._lock:
             self._tracked += 1
-        fut.add_done_callback(
-            lambda f, t=t: (self.samples.append(self._clock() - t),
-                            self._sem.release())
-        )
+
+        def _record(f, t=t):
+            dt = self._clock() - t
+            with self._lock:
+                self.samples.append(dt)
+            self._sem.release()
+
+        fut.add_done_callback(_record)
         return fut
 
     def wait(self, timeout_s: float = 60.0) -> List[float]:
-        """Block until every tracked future's sample has landed."""
+        """Block until every tracked future's sample has landed; returns
+        a snapshot of the samples (not the live list)."""
         deadline = time.monotonic() + timeout_s
         with self._lock:
             n, self._tracked = self._tracked, 0
@@ -92,7 +103,8 @@ class LatencyRecorder:
                 raise TimeoutError(
                     f"latency samples missing after {timeout_s}s"
                 )
-        return self.samples
+        with self._lock:
+            return list(self.samples)
 
 
 class FakeClock:
@@ -270,6 +282,7 @@ class MicroBatcher:
             "submitted": 0,
             "batch_items": 0,         # running sum of formed-batch sizes
             "rejected": 0,            # admission-control sheds
+            "finalize_short": 0,      # finalize arity errors (stranded futures)
             "item_latency_s": [],     # submit -> future resolved
             "pending_peak": 0,        # max queued items ever observed
             "inflight_peak": 0,       # max dispatched-but-unfinalized
@@ -408,25 +421,35 @@ class MicroBatcher:
 
     # -- scheduler thread ------------------------------------------------------
     def _next_batch(self):
-        """Block until a bucket is ready; None once stopped AND drained."""
+        """Block until a bucket is ready; None once stopped AND drained.
+
+        Every non-empty bucket is classified (full / drain-on-stop /
+        timeout) and, among the ready ones, the bucket whose HEAD
+        request is oldest wins.  Scanning ``self._pending`` in dict
+        insertion order and taking the first ready bucket — the old
+        behaviour — let an early bucket under sustained full-batch load
+        starve a later bucket's timeout flush indefinitely."""
         with self._cond:
             while True:
                 now = self.clock()
                 ready_key, reason, deadline = None, None, None
+                oldest_head = None
                 for k, dq in self._pending.items():
                     if not dq:
                         continue
+                    head_t = dq[0].t_submit
                     if len(dq) >= self.max_batch:
-                        ready_key, reason = k, "full"
-                        break
-                    if self._stop:
-                        ready_key, reason = k, "drain"
-                        break
-                    d = dq[0].t_submit + self.max_wait_s
-                    if d <= now:
-                        ready_key, reason = k, "timeout"
-                        break
-                    deadline = d if deadline is None else min(deadline, d)
+                        r = "full"
+                    elif self._stop:
+                        r = "drain"
+                    elif head_t + self.max_wait_s <= now:
+                        r = "timeout"
+                    else:
+                        d = head_t + self.max_wait_s
+                        deadline = d if deadline is None else min(deadline, d)
+                        continue
+                    if oldest_head is None or head_t < oldest_head:
+                        ready_key, reason, oldest_head = k, r, head_t
                 if ready_key is not None:
                     dq = self._pending[ready_key]
                     n = min(len(dq), self.max_batch)
@@ -509,6 +532,7 @@ class MicroBatcher:
         try:
             outs = raw if self.finalize_fn is None \
                 else self.finalize_fn(key, raw)
+            n_out = len(outs)
         except Exception as e:
             for it in items:
                 it.future.set_exception(e)
@@ -520,6 +544,23 @@ class MicroBatcher:
                 self.stats["complete_busy_s"] += dt
             if self.book is not None:
                 self.book.observe("mb_complete_s", dt)
+        if n_out < len(items):
+            # a finalize returning fewer outputs than live items would
+            # silently strand the tail futures (zip stops early) and
+            # hang their callers forever — fail them loudly instead.
+            # MORE outputs than items is legal: the batch axis may be
+            # padded, and zip ignores the padding rows.
+            err = RuntimeError(
+                f"finalize_fn returned {n_out} outputs for {len(items)} "
+                f"batch items (key={key!r}); stranded futures failed"
+            )
+            with self._stats_lock:
+                self.stats["finalize_short"] += 1
+            if self.book is not None:
+                self.book.incr("mb_finalize_short")
+            for it in items[n_out:]:
+                it.future.set_exception(err)
+            items = items[:n_out]
         for it, out in zip(items, outs):
             if self.post_fn is None:
                 self._resolve(it, out)

@@ -522,6 +522,18 @@ class STDService:
         """:meth:`metrics_snapshot` in Prometheus text-exposition form."""
         return prometheus_text(self.metrics_snapshot())
 
+    def queue_gauges(self) -> Dict[str, float]:
+        """Live scheduler load — queued requests and in-flight batches
+        (zeros when the batcher is not running).  The cheap subset of
+        :meth:`metrics_snapshot` a router polls per placement decision
+        (launch/router.py scores replicas with it)."""
+        batcher = self._batcher
+        if batcher is None:
+            return {"queue_depth": 0.0, "inflight": 0.0}
+        snap = batcher.stats_snapshot()
+        return {"queue_depth": snap.get("queue_depth", 0.0),
+                "inflight": snap.get("inflight", 0.0)}
+
     def __call__(self, img: np.ndarray) -> List[Dict]:
         t0 = time.perf_counter()
         x, valid, tr = self.preprocess(img)

@@ -28,13 +28,29 @@ from repro.checkpoint import CheckpointManager
 
 
 class Watchdog:
+    """EMA step-time monitor.  A step slower than ``threshold x`` the
+    EMA is flagged as a straggler incident.  Transient spikes must not
+    inflate the baseline, so a straggler step normally leaves the EMA
+    untouched — but a *sustained* legitimate slowdown (re-mesh, thermal
+    throttle, a permanently slower replica) would then flag every
+    subsequent step forever.  After ``adapt_after`` consecutive
+    incidents the monitor accepts the slowdown as the new normal and
+    starts blending straggler times into the EMA too, so the baseline
+    converges and flagging stops; ``consecutive`` exposes the live
+    incident streak (launch/router.py reads it as a replica-health
+    signal)."""
+
     def __init__(self, threshold: float = 3.0, ema: float = 0.9,
-                 warmup_steps: int = 2):
+                 warmup_steps: int = 2, adapt_after: int = 5):
+        if adapt_after < 1:
+            raise ValueError("adapt_after must be >= 1")
         self.threshold = threshold
         self.ema_coef = ema
         self.warmup_steps = warmup_steps
+        self.adapt_after = adapt_after
         self.ema: Optional[float] = None
         self.incidents: List[Dict[str, Any]] = []
+        self.consecutive = 0          # live streak of straggler incidents
         self._seen = 0
 
     def observe(self, step: int, dt: float) -> bool:
@@ -47,8 +63,16 @@ class Watchdog:
             return False
         is_straggler = dt > self.threshold * self.ema
         if is_straggler:
+            self.consecutive += 1
             self.incidents.append({"step": step, "dt": dt, "ema": self.ema})
+            if self.consecutive >= self.adapt_after:
+                # sustained slowdown: adapt the baseline toward the new
+                # step time so flagging recovers instead of persisting
+                # forever (the streak keeps counting until a step passes)
+                self.ema = (self.ema_coef * self.ema
+                            + (1 - self.ema_coef) * dt)
         else:
+            self.consecutive = 0
             self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * dt
         return is_straggler
 

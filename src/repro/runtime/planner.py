@@ -313,6 +313,24 @@ class Planner:
             c = nxt
         return c.params
 
+    def set_params(self, params: CostParams) -> "Planner":
+        """Swap the analytic constants at the bottom of the provider
+        chain, preserving any MeasuredCost overlays above them — the
+        online-refit seam: launch/router.py's control loop fits
+        CostParams from each replica's live book and calls this, so
+        unmeasured combos route on the fitted constants from the next
+        ``choose()`` on, with no service restart and no engine
+        recompiles."""
+
+        def rebuilt(c: Any) -> CostProvider:
+            if isinstance(c, MeasuredCost):
+                c.fallback = rebuilt(c.fallback)
+                return c
+            return AnalyticCost(params)
+
+        self.cost = rebuilt(self.cost)
+        return self
+
     def use_measurements(self, book, *,
                          min_observations: int =
                          MeasuredCost.MIN_OBSERVATIONS,

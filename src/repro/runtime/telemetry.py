@@ -95,13 +95,19 @@ class CostBook:
     this, the PR 4 lost-update pattern)."""
 
     def __init__(self, *, ewma_alpha: float = 0.25, window: int = 256,
-                 warmup: int = 1):
+                 warmup: int = 1,
+                 labels: Optional[Dict[str, str]] = None):
         if not 0.0 < ewma_alpha <= 1.0:
             raise ValueError("ewma_alpha must be in (0, 1]")
         if warmup < 0:
             raise ValueError("warmup must be >= 0")
         self.ewma_alpha = ewma_alpha
         self.window = window
+        # constant label set (e.g. {"replica": "r0"}) embedded in every
+        # snapshot metric name, so N per-replica books aggregate into
+        # one scrape without the named counters/gauges clobbering each
+        # other (launch/router.py gives each replica's book its name)
+        self.labels: Dict[str, str] = dict(labels or {})
         # the first call of a compiled engine traces + XLA-compiles
         # INSIDE the call (jit is lazy), a multi-second one-off that
         # would poison a millisecond-scale EWMA — skip the first
@@ -226,7 +232,9 @@ class CostBook:
         in the book.  Labels are embedded Prometheus-style in the name,
         so the dict stays flat: e.g.
         ``std_step_ewma_s{bucket="128x64",batch="4",plan="row_band",
-        stage="step"}``."""
+        stage="step"}``.  A book constructed with ``labels=`` gets them
+        merged into every name (see :func:`relabel`), so per-replica
+        books stay disjoint when a router aggregates N snapshots."""
         out: Dict[str, float] = {}
         with self._lock:
             for ((hw, batch, kind), stage, precision, model), s in sorted(
@@ -259,7 +267,35 @@ class CostBook:
                 out[f"{prefix}{name}_total"] = v
             for name, v in sorted(self._gauges.items()):
                 out[f"{prefix}{name}"] = v
+        if self.labels:
+            out = relabel(out, **self.labels)
         return out
+
+
+def _merge_labels(name: str, suffix: str) -> str:
+    """Insert a rendered ``k="v",...`` label suffix into a metric name,
+    merging into an existing ``{...}`` group or appending a new one."""
+    if not suffix:
+        return name
+    if name.endswith("}"):
+        return f"{name[:-1]},{suffix}}}"
+    return f"{name}{{{suffix}}}"
+
+
+def relabel(metrics: Dict[str, float], **labels: str) -> Dict[str, float]:
+    """Embed constant labels into every metric name of a flat snapshot
+    (names already carrying one of the label keys keep their value).
+    This is the per-replica aggregation seam: N replica snapshots
+    relabel to disjoint name sets and merge into one scrape without
+    gauge clobbering."""
+    out: Dict[str, float] = {}
+    for name, v in metrics.items():
+        missing = {k: val for k, val in labels.items()
+                   if f'{k}="' not in name}
+        suffix = ",".join(f'{k}="{val}"'
+                          for k, val in sorted(missing.items()))
+        out[_merge_labels(name, suffix)] = v
+    return out
 
 
 def prometheus_text(metrics: Dict[str, float]) -> str:

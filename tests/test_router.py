@@ -1,0 +1,452 @@
+"""Fleet-layer tests (launch/router.py): N replicas behind the
+telemetry-driven router, simulated in-process and driven entirely by
+the FakeClock harness — zero real sleeps.
+
+The acceptance properties pinned here:
+
+  (a) p99-aware routing beats round-robin on tail latency when the
+      replicas are heterogeneous (one fast, one slow server);
+  (b) under overload, interactive-class requests are never shed before
+      batch-class ones (batch admission stops at ``batch_threshold``,
+      interactive continues to ``max_outstanding``);
+  (c) the control loop's online CostParams re-fit changes a live
+      routing decision (single_device -> row_band for a tall bucket)
+      with no restart — ``Planner.set_params`` swaps the analytic
+      constants under any measured overlay.
+
+Plus: watchdog-based replica health (exclusion, probing, and recovery
+through the adapted EMA), per-replica metric labels aggregating into
+one scrape, and the admission/validation surface.
+"""
+from concurrent.futures import Future
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.launch.batching import FakeClock, QueueFull
+from repro.launch.router import (
+    DEADLINE_CLASSES,
+    POLICIES,
+    Router,
+    ServiceReplica,
+)
+from repro.runtime.executor import plan_kind
+from repro.runtime.fault_tolerance import Watchdog
+from repro.runtime.planner import PlanFeatures, Planner
+from repro.runtime.telemetry import CostBook
+
+
+class SimService:
+    """One simulated replica: a FIFO single-server queue on a shared
+    FakeClock.  ``submit`` computes the request's completion time from
+    the server's backlog; futures resolve when the clock advances past
+    it — so a fleet of these is exactly deterministic."""
+
+    def __init__(self, clk: FakeClock, service_s: float,
+                 hw=(64, 64)):
+        self.clock = clk
+        self.service_s = service_s      # mutable: tests inject slowdowns
+        self.hw = tuple(hw)
+        self.book = CostBook(warmup=0)
+        self.started = False
+        self._busy_until = 0.0
+        self._queue = []                # (done_at, seq, fut, payload)
+        self._seq = 0
+        clk.subscribe(self._drain)
+
+    def start_batched(self):
+        self.started = True
+
+    def stop_batched(self):
+        self.started = False
+
+    def submit(self, payload):
+        assert self.started, "submit before start_batched"
+        fut = Future()
+        now = self.clock()
+        done = max(now, self._busy_until) + self.service_s
+        self._busy_until = done
+        self.book.record_step(self.hw, 1, "single_device",
+                              self.service_s)
+        self._queue.append((done, self._seq, fut, payload))
+        self._seq += 1
+        return fut
+
+    def _drain(self):
+        now = self.clock()
+        due = sorted(q for q in self._queue if q[0] <= now)
+        self._queue = [q for q in self._queue if q[0] > now]
+        for _done_at, _seq, fut, payload in due:
+            fut.set_result(payload)
+
+
+def no_health_watchdog():
+    """A watchdog that never flags — isolates pure-routing tests from
+    the replica-health machinery."""
+    return Watchdog(threshold=float("inf"), warmup_steps=0)
+
+
+def make_fleet(clk, service_times, *, policy, **router_kw):
+    sims = [SimService(clk, s) for s in service_times]
+    reps = [ServiceReplica(f"r{i}", sim, clock=clk,
+                           watchdog=no_health_watchdog())
+            for i, sim in enumerate(sims)]
+    router_kw.setdefault("unhealthy_after", 10 ** 9)
+    return sims, reps, Router(reps, policy=policy, clock=clk,
+                              **router_kw)
+
+
+def drive(clk, router, n_requests, arrival_dt):
+    """Open-loop arrival process: one request per ``arrival_dt`` of
+    fake time; returns every request's measured latency."""
+    lat = []
+    futs = []
+    for i in range(n_requests):
+        t0 = clk()
+        fut = router.submit(i)
+        fut.add_done_callback(
+            lambda f, t0=t0: lat.append(clk() - t0))
+        futs.append(fut)
+        clk.advance(arrival_dt)
+    clk.advance(1000.0)                 # drain the fleet
+    assert all(f.done() for f in futs)
+    return sorted(lat)
+
+
+class TestP99Routing:
+    """Acceptance (a): tail-aware placement on heterogeneous replicas."""
+
+    SERVICE_TIMES = (0.05, 0.5)         # r0 fast, r1 10x slower
+    N, ARRIVAL = 24, 0.1
+
+    def _run(self, policy):
+        clk = FakeClock()
+        _, _, router = make_fleet(clk, self.SERVICE_TIMES, policy=policy)
+        with router:
+            lat = drive(clk, router, self.N, self.ARRIVAL)
+            placed = dict(router.stats["placed"])
+        return lat, placed
+
+    def test_p99_routing_beats_round_robin_tail(self):
+        rr_lat, rr_placed = self._run("round_robin")
+        p99_lat, p99_placed = self._run("p99")
+        # identical arrival schedule, same simulated fleet: round-robin
+        # piles half the traffic on the slow replica and its queue
+        # grows without bound; p99 scoring discounts it
+        assert rr_placed == {"r0": 12, "r1": 12}
+        assert p99_placed["r0"] >= 20
+        assert max(rr_lat) > 2.0 * max(p99_lat)
+        assert max(p99_lat) <= 1.0       # slow replica explored, once-ish
+        # every request still completed under both policies
+        assert len(rr_lat) == len(p99_lat) == self.N
+
+    def test_least_loaded_follows_queue_depth(self):
+        clk = FakeClock()
+        sims, reps, router = make_fleet(clk, (0.05, 0.05),
+                                        policy="least_loaded")
+        with router:
+            # preload r0 outside the router: 4 requests queued
+            for i in range(4):
+                reps[0].submit(("pre", i))
+            assert reps[0].load() == 4.0
+            before = dict(router.stats["placed"])
+            router.submit("x")
+            after = router.stats["placed"]
+            assert after["r1"] == before["r1"] + 1
+            clk.advance(10.0)
+
+    def test_unmeasured_replica_gets_explored_under_p99(self):
+        clk = FakeClock()
+        _, reps, router = make_fleet(clk, (0.05, 0.05), policy="p99")
+        with router:
+            for i in range(4):
+                router.submit(i)
+                clk.advance(0.2)
+            placed = router.stats["placed"]
+            # neither replica starves: the unmeasured one scores as
+            # free until it has samples
+            assert placed["r0"] >= 1 and placed["r1"] >= 1
+            clk.advance(10.0)
+
+
+class TestDeadlineClassAdmission:
+    """Acceptance (b): batch sheds first, interactive keeps headroom."""
+
+    def _router(self, clk, **kw):
+        kw.setdefault("max_outstanding", 8)
+        kw.setdefault("batch_threshold", 4)
+        _, _, router = make_fleet(clk, (100.0,), policy="round_robin",
+                                  **kw)
+        return router
+
+    def test_batch_sheds_before_interactive(self):
+        clk = FakeClock()
+        router = self._router(clk)
+        with router:
+            admitted = []
+            for i in range(4):           # fill to the batch threshold
+                admitted.append(router.submit(i, deadline_class="batch"))
+            with pytest.raises(QueueFull):
+                router.submit("b!", deadline_class="batch")
+            assert router.stats["shed"] == {"interactive": 0, "batch": 1}
+            # interactive still has headroom up to the full cap
+            for i in range(4):
+                admitted.append(
+                    router.submit(i, deadline_class="interactive"))
+            with pytest.raises(QueueFull):
+                router.submit("i!", deadline_class="interactive")
+            assert router.stats["shed"] == {"interactive": 1, "batch": 1}
+            # every admitted request drains and completes
+            clk.advance(10_000.0)
+            assert all(f.done() for f in admitted)
+
+    def test_interactive_never_sheds_before_batch_on_mixed_stream(self):
+        clk = FakeClock()
+        router = self._router(clk)
+        with router:
+            sheds = []                   # deadline classes in shed order
+            for i in range(30):          # overload, nothing completes
+                cls = "interactive" if i % 2 else "batch"
+                try:
+                    router.submit(i, deadline_class=cls)
+                except QueueFull:
+                    sheds.append(cls)
+            assert sheds, "overload never shed"
+            assert sheds[0] == "batch"
+            first_interactive = sheds.index("interactive") \
+                if "interactive" in sheds else len(sheds)
+            assert "batch" in sheds[:first_interactive]
+            clk.advance(10_000.0)
+
+    def test_unknown_deadline_class_rejected(self):
+        clk = FakeClock()
+        router = self._router(clk)
+        with router:
+            with pytest.raises(ValueError, match="deadline class"):
+                router.submit(0, deadline_class="best_effort")
+            clk.advance(10_000.0)
+
+
+def fake_mesh(data_n=1, model_n=4):
+    """mesh_axis_sizes only reads axis_names + devices.shape, so a
+    duck-typed mesh routes plans without any real devices."""
+    return SimpleNamespace(
+        axis_names=("data", "model"),
+        devices=np.empty((data_n, model_n), dtype=object))
+
+
+def tall_features(hw):
+    h, w = hw
+    return PlanFeatures(flops=2e5 * h * w / 64.0,
+                        halo_bytes=3e4 * w / 64.0,
+                        deepest_stride=32, halo_layers=20)
+
+
+class TestOnlineRefit:
+    """Acceptance (c): the control loop re-fits CostParams from the
+    live book and flips a routing decision with no restart."""
+
+    HW = (128, 64)                       # H % (model_n * stride) == 0
+
+    def _replica(self, clk):
+        svc = SimService(clk, 0.05)
+        svc.planner = Planner(fake_mesh(1, 4), tall_features)
+        # live "measurements": single_device steps are far slower than
+        # the napkin constants predict (a slow host), linear in FLOPs
+        # so the least-squares fit recovers peak_flops exactly
+        for _ in range(3):
+            svc.book.record_step(self.HW, 1, "single_device", 0.02)
+            svc.book.record_step((64, 64), 1, "single_device", 0.01)
+        return svc, ServiceReplica("r0", svc, clock=clk,
+                                   features_fn=tall_features,
+                                   watchdog=no_health_watchdog())
+
+    def test_control_loop_refit_flips_routing_online(self):
+        clk = FakeClock()
+        svc, rep = self._replica(clk)
+        router = Router([rep], policy="p99", refit_interval_s=10.0,
+                        clock=clk)
+        with router:
+            planner = svc.planner
+            # napkin constants: overhead dominates, the tall bucket
+            # stays on a single device
+            assert plan_kind(planner.choose(self.HW, 1)) == \
+                "single_device"
+            clk.advance(10.5)            # the control loop tick fires
+            assert router.stats["refits"] >= 1
+            # fitted peak_flops ~1.28e9 makes compute dominant, so
+            # splitting the rows across the model axis wins — the SAME
+            # planner object routes differently, no restart
+            assert plan_kind(planner.choose(self.HW, 1)) == "row_band"
+            assert planner.params.peak_flops == pytest.approx(1.28e9,
+                                                              rel=1e-3)
+
+    def test_refit_now_returns_fitted_params_per_replica(self):
+        clk = FakeClock()
+        svc, rep = self._replica(clk)
+        router = Router([rep], policy="p99", clock=clk)
+        with router:
+            fitted = router.refit_now()
+            assert set(fitted) == {"r0"}
+            assert fitted["r0"].peak_flops == pytest.approx(1.28e9,
+                                                            rel=1e-3)
+
+    def test_set_params_preserves_measured_overlay(self):
+        from repro.runtime.planner import CostParams, MeasuredCost
+
+        book = CostBook(warmup=0)
+        planner = Planner(fake_mesh(1, 4), tall_features)
+        planner.use_measurements(book)
+        new = CostParams(peak_flops=1.28e9)
+        planner.set_params(new)
+        assert isinstance(planner.cost, MeasuredCost)
+        assert planner.cost.book is book
+        assert planner.params == new
+
+    def test_replica_without_planner_refits_to_none(self):
+        clk = FakeClock()
+        svc = SimService(clk, 0.05)
+        rep = ServiceReplica("r0", svc, clock=clk,
+                             watchdog=no_health_watchdog())
+        assert rep.refit() is None
+
+
+class TestReplicaHealth:
+    """Watchdog-driven exclusion, probing, and recovery: a replica
+    that slows down 10x is routed around; its probes feed the adapted
+    EMA (the fault_tolerance fix) so it rejoins once the slowdown is
+    its own baseline."""
+
+    def test_slow_replica_excluded_then_recovers(self):
+        clk = FakeClock()
+        fast = SimService(clk, 0.05)
+        sick = SimService(clk, 0.05)
+        wd = Watchdog(threshold=3.0, ema=0.5, warmup_steps=0,
+                      adapt_after=2)
+        reps = [
+            ServiceReplica("r0", fast, clock=clk,
+                           watchdog=no_health_watchdog()),
+            ServiceReplica("r1", sick, clock=clk, watchdog=wd),
+        ]
+        router = Router(reps, policy="round_robin", unhealthy_after=2,
+                        probe_every=4, clock=clk)
+
+        def place_one(i):
+            before = dict(router.stats["placed"])
+            router.submit(i)
+            # fine-grained ticks: a request's measured latency is its
+            # resolving tick, so 0.1 s granularity separates the fast
+            # (0.05 s) from the slowed (1.0 s) server
+            for _ in range(11):
+                clk.advance(0.1)
+            after = router.stats["placed"]
+            return next(n for n in after if after[n] != before[n])
+
+        with router:
+            for i in range(6):           # warm both watchdog EMAs
+                place_one(i)
+            sick.service_s = 1.0         # sustained 10x slowdown
+            placements = [place_one(i) for i in range(16)]
+        # the slowdown is detected and r1 is routed around...
+        assert wd.incidents, "slowdown never flagged"
+        r0_run = max(len(s) for s in
+                     "".join("x" if p == "r0" else "." for p in
+                             placements).split("."))
+        assert r0_run >= 3, placements
+        # ...probes keep feeding its watchdog, the EMA adapts, and r1
+        # rejoins the rotation
+        assert router.stats["probes"] >= 1
+        assert wd.consecutive == 0
+        first_exclusion = placements.index("r0")
+        assert "r1" in placements[first_exclusion + r0_run:], placements
+
+    def test_all_unhealthy_still_routes(self):
+        clk = FakeClock()
+        sim = SimService(clk, 0.05)
+        wd = Watchdog(threshold=3.0, warmup_steps=0, adapt_after=10 ** 9)
+        rep = ServiceReplica("r0", sim, clock=clk, watchdog=wd)
+        router = Router([rep], policy="round_robin", unhealthy_after=1,
+                        clock=clk)
+        with router:
+            wd.ema = 1e-9                # everything is a straggler now
+            router.submit(0)
+            clk.advance(1.0)
+            router.submit(1)             # degraded fleet: still placed
+            clk.advance(1.0)
+            assert router.stats["placed"]["r0"] == 2
+
+
+class TestFleetTelemetry:
+    def test_one_scrape_aggregates_all_replicas_without_clobbering(self):
+        clk = FakeClock()
+        _, reps, router = make_fleet(clk, (0.05, 0.5), policy="p99")
+        with router:
+            drive(clk, router, 8, 0.1)
+            snap = router.metrics_snapshot()
+        for name in ("r0", "r1"):
+            # each replica's book series and gauges are present under
+            # its own label — the label dimension prevents clobbering
+            assert any(f'replica="{name}"' in k
+                       and k.startswith("std_step_p99_s{")
+                       for k in snap), name
+            assert snap[f'std_replica_outstanding{{replica="{name}"}}'] \
+                == 0.0
+        placed = sum(
+            snap[f'std_router_placed_total{{replica="{n}"}}']
+            for n in ("r0", "r1"))
+        assert placed == 8.0
+        assert snap['std_router_shed_total{class="interactive"}'] == 0.0
+        assert snap["std_router_outstanding"] == 0.0
+
+    def test_replica_labels_book_on_wrap(self):
+        clk = FakeClock()
+        sim = SimService(clk, 0.05)
+        ServiceReplica("west-3", sim, clock=clk)
+        assert sim.book.labels == {"replica": "west-3"}
+
+
+class TestRouterValidation:
+    def test_policy_and_replica_validation(self):
+        clk = FakeClock()
+        sim = SimService(clk, 0.05)
+        rep = ServiceReplica("r0", sim, clock=clk)
+        with pytest.raises(ValueError, match="at least one"):
+            Router([])
+        with pytest.raises(ValueError, match="unknown policy"):
+            Router([rep], policy="fastest_first")
+        dup = ServiceReplica("r0", SimService(clk, 0.05), clock=clk)
+        with pytest.raises(ValueError, match="unique"):
+            Router([rep, dup])
+        assert set(POLICIES) == {"round_robin", "p99", "least_loaded"}
+        assert set(DEADLINE_CLASSES) == {"interactive", "batch"}
+
+    def test_submit_before_start_rejected(self):
+        clk = FakeClock()
+        rep = ServiceReplica("r0", SimService(clk, 0.05), clock=clk)
+        router = Router([rep])
+        with pytest.raises(RuntimeError, match="start"):
+            router.submit(0)
+
+    def test_service_level_shed_rolls_back_outstanding(self):
+        clk = FakeClock()
+
+        class Shedding:
+            book = None
+
+            def start_batched(self):
+                pass
+
+            def stop_batched(self):
+                pass
+
+            def submit(self, payload):
+                raise QueueFull("service full")
+
+        rep = ServiceReplica("r0", Shedding(), clock=clk)
+        router = Router([rep], policy="round_robin")
+        with router:
+            with pytest.raises(QueueFull):
+                router.submit(0)
+            assert router.outstanding() == 0
+            assert router.stats["shed"]["interactive"] == 1

@@ -350,6 +350,139 @@ class TestAdmissionStress:
         assert mb.stats["submitted"] == len(accepted)
 
 
+class TestFinalizeArity:
+    def test_short_finalize_fails_stranded_futures(self):
+        """Regression: _complete_one zipped items against finalize_fn's
+        output, so a finalize returning FEWER outputs than items
+        silently stranded the tail futures and their callers hung
+        forever.  Now the stranded futures fail loudly and the arity
+        error is counted."""
+
+        def finalize(key, raw):
+            return raw[:-1]              # drops the last item's output
+
+        with MicroBatcher(lambda k, ps: ps, finalize_fn=finalize,
+                          max_batch=3, max_wait_ms=5) as mb:
+            futs = [mb.submit("a", i) for i in range(3)]
+            # the covered items still resolve normally...
+            assert [f.result(timeout=10) for f in futs[:2]] == [0, 1]
+            # ...and the stranded one raises instead of hanging
+            with pytest.raises(RuntimeError, match="finalize_fn returned "
+                                                   "2 outputs for 3"):
+                futs[2].result(timeout=10)
+        assert mb.stats["finalize_short"] == 1
+
+    def test_padded_finalize_output_is_legal(self):
+        """MORE outputs than live items is the padded-batch contract
+        (STDService._mb_finalize returns the full padded batch axis) —
+        it must not count as an arity error."""
+
+        def finalize(key, raw):
+            return list(raw) + ["pad"]
+
+        with MicroBatcher(lambda k, ps: ps, finalize_fn=finalize,
+                          max_batch=2, max_wait_ms=5) as mb:
+            futs = [mb.submit("a", i) for i in range(2)]
+            assert [f.result(timeout=10) for f in futs] == [0, 1]
+        assert mb.stats["finalize_short"] == 0
+
+
+class TestBucketFairness:
+    def test_oldest_ready_bucket_beats_insertion_order(self):
+        """Regression: _next_batch scanned self._pending in
+        dict-insertion order and took the FIRST ready bucket, so an
+        early bucket under sustained full-batch load starved a later
+        bucket's timeout flush indefinitely.  With bucket "a" (inserted
+        first) full but younger, and bucket "b" past its flush deadline
+        with the older head request, "b" must flush first."""
+        from collections import deque
+        from concurrent.futures import Future
+
+        from repro.launch.batching import _Item
+
+        clk = FakeClock()
+        mb = MicroBatcher(lambda k, ps: ps, max_batch=2, max_wait_ms=10,
+                          clock=clk)
+
+        # craft the pending state directly — the scheduler thread is
+        # never started, so _next_batch runs synchronously here
+        def put(key, t_submit):
+            mb._pending.setdefault(key, deque()).append(
+                _Item(key, None, Future(), t_submit))
+            mb._n_pending += 1
+
+        put("a", 0.5)                    # dict-insertion order: "a" first
+        put("b", 0.0)                    # oldest head, below max_batch
+        put("a", 0.5)                    # "a" now full (max_batch=2)
+        clk.advance(0.6)                 # b's 10 ms deadline long past
+        key, reason, items = mb._next_batch()
+        assert (key, reason) == ("b", "timeout")
+        assert len(items) == 1
+        # with b flushed, the full bucket goes next
+        key, reason, items = mb._next_batch()
+        assert (key, reason) == ("a", "full")
+        assert len(items) == 2
+
+    def test_sustained_full_bucket_does_not_starve_timeout_flush(self):
+        """End-to-end on the FakeClock: bucket "hot" is refilled to
+        max_batch on every flush while lone bucket "cold" waits on its
+        timeout — the cold request must still complete."""
+        clk = FakeClock()
+        with MicroBatcher(lambda k, ps: ps, max_batch=2, max_wait_ms=10,
+                          clock=clk) as mb:
+            cold = mb.submit("cold", "c")
+            hot = [mb.submit("hot", i) for i in range(6)]
+            clk.advance(0.011)           # cold's deadline passes
+            assert cold.result(timeout=10) == "c"
+            assert [f.result(timeout=10) for f in hot] == list(range(6))
+        assert mb.stats["flush_timeout"] >= 1
+
+
+class TestLatencyRecorderThreadSafety:
+    def test_lost_update_hammer(self):
+        """samples is appended from done-callback threads: N threads x
+        PER futures must land exactly N*PER samples (the PR 4
+        lost-update pattern — appends hold the recorder lock)."""
+        rec = LatencyRecorder()
+        N_THREADS, PER = 8, 200
+        from concurrent.futures import Future
+
+        def worker(i):
+            for _ in range(PER):
+                f = Future()
+                rec.track(f)
+                f.set_result(None)
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(N_THREADS)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in ts)
+        samples = rec.wait(timeout_s=30)
+        assert len(samples) == N_THREADS * PER
+
+    def test_wait_returns_snapshot_not_live_list(self):
+        """Regression: wait() returned self.samples itself, so a caller
+        sorting/percentiling the return value raced later-tracked
+        futures' appends.  It must be a snapshot."""
+        from concurrent.futures import Future
+
+        rec = LatencyRecorder()
+        f = Future()
+        rec.track(f)
+        f.set_result(None)
+        first = rec.wait(timeout_s=10)
+        assert len(first) == 1
+        g = Future()
+        rec.track(g)
+        g.set_result(None)
+        rec.wait(timeout_s=10)
+        assert len(first) == 1           # the earlier snapshot is frozen
+        assert first is not rec.samples
+
+
 class TestHostPipeline:
     def test_ordered_results(self):
         from repro.runtime.pipeline import HostPipeline

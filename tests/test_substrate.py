@@ -253,6 +253,45 @@ class TestFaultTolerance:
         assert wd.observe(99, 1.0)                  # 10x the EMA
         assert wd.incidents[-1]["step"] == 99
 
+    def test_watchdog_transient_spike_leaves_ema_untouched(self):
+        """A lone spike is flagged and must NOT inflate the baseline."""
+        wd = Watchdog(threshold=3.0, warmup_steps=1)
+        for i in range(10):
+            wd.observe(i, 0.1)
+        ema_before = wd.ema
+        assert wd.observe(99, 1.0)
+        assert wd.ema == pytest.approx(ema_before)
+        assert not wd.observe(100, 0.1)             # back to normal
+        assert wd.consecutive == 0
+
+    def test_watchdog_adapts_to_sustained_slowdown(self):
+        """Regression: observe() never updated the EMA on a straggler
+        step, so a sustained legitimate slowdown (e.g. after re-mesh)
+        flagged every subsequent step forever.  After ``adapt_after``
+        consecutive incidents the EMA must converge on the new step
+        time and flagging must stop."""
+        wd = Watchdog(threshold=3.0, ema=0.5, warmup_steps=1,
+                      adapt_after=3)
+        for i in range(10):
+            assert not wd.observe(i, 0.1)
+        # a 10x sustained slowdown: the onset is flagged...
+        flagged = [wd.observe(100 + i, 1.0) for i in range(20)]
+        assert flagged[0] and flagged[1] and flagged[2]
+        # ...but the baseline adapts and flagging recovers (the old
+        # behaviour flagged all 20)
+        assert not all(flagged)
+        assert not flagged[-1]
+        assert wd.consecutive == 0
+        assert wd.ema == pytest.approx(1.0, rel=0.35)
+        # the new normal is no longer an incident
+        assert not wd.observe(200, 1.0)
+        # and the incident log still recorded the onset
+        assert wd.incidents and wd.incidents[0]["step"] == 100
+
+    def test_watchdog_adapt_after_validation(self):
+        with pytest.raises(ValueError):
+            Watchdog(adapt_after=0)
+
     def test_straggler_triggers_incident_hook(self):
         incidents = []
         slow_once = {"done": False}

@@ -405,3 +405,52 @@ class TestServiceMetrics:
         assert "std_requests_total" in txt
         for line in txt.strip().splitlines():
             float(line.rsplit(" ", 1)[1])
+
+
+class TestSnapshotLabels:
+    """The per-replica label dimension: N books aggregate into one
+    scrape without name (gauge) clobbering — launch/router.py's
+    ServiceReplica names each service book this way."""
+
+    def _filled(self, **labels):
+        b = CostBook(warmup=0, labels=labels or None)
+        b.record_step((64, 64), 2, "single_device", 0.05)
+        b.incr("mb_shed")
+        b.set_gauge("mb_queue_depth", 3.0)
+        b.observe("mb_dispatch_s", 0.01)
+        return b
+
+    def test_labels_embed_in_every_metric_name(self):
+        snap = self._filled(replica="r1").snapshot()
+        assert snap, "empty snapshot"
+        assert all('replica="r1"' in k for k in snap)
+        # step series merge into the existing brace group...
+        step = [k for k in snap if k.startswith("std_step_ewma_s{")]
+        assert step and step[0].count("{") == 1
+        # ...and plain counters/gauges grow a brace group
+        assert snap['std_mb_shed_total{replica="r1"}'] == 1.0
+        assert snap['std_mb_queue_depth{replica="r1"}'] == 3.0
+
+    def test_unlabeled_book_keeps_historical_names(self):
+        snap = self._filled().snapshot()
+        assert snap["std_mb_shed_total"] == 1.0
+        assert "replica=" not in "".join(snap)
+
+    def test_two_replica_books_merge_without_clobbering(self):
+        a = self._filled(replica="r0").snapshot()
+        b = self._filled(replica="r1").snapshot()
+        merged = {**a, **b}
+        assert len(merged) == len(a) + len(b)
+        assert merged['std_mb_queue_depth{replica="r0"}'] == 3.0
+        assert merged['std_mb_queue_depth{replica="r1"}'] == 3.0
+        # the merged scrape still renders as prometheus text
+        assert "std_mb_queue_depth" in prometheus_text(merged)
+
+    def test_relabel_skips_names_already_carrying_the_label(self):
+        from repro.runtime.telemetry import relabel
+
+        out = relabel({'x{replica="keep"}': 1.0, 'y{a="1"}': 2.0,
+                       "z": 3.0}, replica="r9")
+        assert out == {'x{replica="keep"}': 1.0,
+                       'y{a="1",replica="r9"}': 2.0,
+                       'z{replica="r9"}': 3.0}
