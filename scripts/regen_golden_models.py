@@ -46,9 +46,19 @@ def main(argv=None) -> int:
     mod = _load_test_module()
     os.makedirs(mod.GOLDEN_DIR, exist_ok=True)
     stale = []
+    artifacts = []
     for name in sorted(mod.MODEL_ZOO):
-        text = mod.golden_model(name).program.disassemble() + "\n"
-        path = mod.golden_path(name)
+        # raw microcode disassembly + the memplan-annotated optimized
+        # program (schedule, arena slots, free-after sets, fusion facts)
+        artifacts.append((
+            mod.golden_path(name),
+            mod.golden_model(name).program.disassemble() + "\n",
+        ))
+        artifacts.append((
+            mod.golden_memplan_path(name),
+            mod.golden_memplan_text(name),
+        ))
+    for path, text in artifacts:
         old = None
         if os.path.exists(path):
             with open(path) as f:
@@ -62,7 +72,7 @@ def main(argv=None) -> int:
                 f.write(text)
             print(f"{os.path.relpath(path, REPO)}: "
                   f"{'rewrote' if old is not None else 'created'} "
-                  f"({len(text.splitlines())} words)")
+                  f"({len(text.splitlines())} lines)")
     if args.check and stale:
         print("stale golden microcode snapshots — run "
               "scripts/regen_golden_models.py:", file=sys.stderr)

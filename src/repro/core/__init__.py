@@ -3,13 +3,15 @@
 C1 microcode ISA/assembler/interpreter, C2 block floating-point,
 C3 Winograd F(4x4,3x3), C6 BN folding + fused upsample.  See DESIGN.md.
 """
-from . import assembler, bfp, fuse, interpreter, microcode, winograd
+from . import assembler, bfp, fuse, interpreter, memplan, microcode, winograd
 from .assembler import Assembler, LayerSpec, Program
 from .interpreter import BFPConfig, FCNEngine, build_stream_fn
+from .memplan import MemPlan, WordPlan, plan_program
 from .microcode import ExtOp, Kernel, LayerType, Microcode, ResOp
 
 __all__ = [
-    "assembler", "bfp", "fuse", "interpreter", "microcode", "winograd",
-    "Assembler", "LayerSpec", "Program", "BFPConfig", "FCNEngine",
-    "build_stream_fn", "ExtOp", "Kernel", "LayerType", "Microcode", "ResOp",
+    "assembler", "bfp", "fuse", "interpreter", "memplan", "microcode",
+    "winograd", "Assembler", "LayerSpec", "Program", "BFPConfig", "FCNEngine",
+    "build_stream_fn", "MemPlan", "WordPlan", "plan_program",
+    "ExtOp", "Kernel", "LayerType", "Microcode", "ResOp",
 ]

@@ -62,6 +62,7 @@ class FCNEngine:
         bfp: Optional[BFPConfig] = None,
         storage_dtype=jnp.float32,
         use_pallas: bool = False,
+        memplan=None,
     ):
         if mode not in ("reference", "optimized"):
             raise ValueError(mode)
@@ -70,6 +71,19 @@ class FCNEngine:
         self.bfp = bfp
         self.storage_dtype = storage_dtype
         self.use_pallas = use_pallas
+        # memplan: None/False -> legacy keep-everything loop; True ->
+        # compute the static plan here (once per engine, pure function of
+        # the program); a MemPlan instance is used as-is.  The plan
+        # supplies fusion facts, dead-word/dead-store elimination, and
+        # per-word free-after sets so the trace drops a buffer reference
+        # at its last use instead of pinning every intermediate.
+        if memplan is True:
+            from . import memplan as memplan_lib
+
+            memplan = memplan_lib.plan_program(
+                program, dtype_bytes=jnp.dtype(storage_dtype).itemsize
+            )
+        self.memplan = memplan or None
 
     # -- parameters ----------------------------------------------------------
     def init_params(self, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
@@ -228,8 +242,13 @@ class FCNEngine:
             y = y / (k * k)
         return y
 
-    def _upsample(self, x, p, mc, spec):
-        if spec.upsample_mode == "nearest":
+    def _upsample(self, x, p, mc, spec, *, decomposed: Optional[bool] = None):
+        # ``decomposed`` is the plan fact "this upsample carries a 3x3
+        # conv eligible for phase decomposition"; None derives it from
+        # the spec (legacy no-plan path).
+        if decomposed is None:
+            decomposed = spec.upsample_mode != "nearest"
+        if not decomposed:
             return fuse.upsample_nearest_2x(x)
         w = p["w"].astype(jnp.float32)
         if self.mode == "optimized":
@@ -315,7 +334,11 @@ class FCNEngine:
                 raise ValueError(f"concat channel mismatch {got}!={want_ch}")
             return jnp.concatenate(parts, axis=-1)
 
-        for idx, mc in enumerate(prog.words):
+        plan = self.memplan
+        indices = plan.schedule if plan is not None else range(len(prog.words))
+        for idx in indices:
+            mc = prog.words[idx]
+            wp = plan.word(idx) if plan is not None else None
             spec = prog.layer_specs[idx]
             xin = read(mc.in_addr, mc.in_ch)
             name = prog.weight_bindings.get(idx)
@@ -323,11 +346,14 @@ class FCNEngine:
             lt = LayerType(mc.layer_type)
             fused_relu = False
             if lt == LayerType.CONV:
-                # conv+bias+ReLU fuse into one launch (optimized mode,
-                # fuse.py eligibility: the residual register reads the
-                # pre-activation value, so res words keep a separate ReLU)
-                fused_relu = (self.mode == "optimized"
-                              and fuse.can_fuse_conv_epilogue(mc))
+                # conv+bias+ReLU fuse into one launch (optimized mode;
+                # eligibility is a plan fact when a memplan is bound, the
+                # per-call fuse.py check otherwise — the residual register
+                # reads the pre-activation value, so res words keep a
+                # separate ReLU either way)
+                eligible = (wp.fuse_relu if wp is not None
+                            else fuse.can_fuse_conv_epilogue(mc))
+                fused_relu = self.mode == "optimized" and eligible
                 y = self._spatial_banded(
                     band_ctx, xin, mc.kernel_size, mc.stride_n,
                     lambda xb: self._conv(xb, p, mc, spec,
@@ -340,10 +366,13 @@ class FCNEngine:
                     lambda xb: self._pool(xb, mc, spec),
                 )
             elif lt == LayerType.UPSAMPLE:
+                up_conv = (wp.fuse_upsample if wp is not None
+                           else spec.upsample_mode != "nearest")
                 y = self._spatial_banded(
                     band_ctx, xin,
-                    1 if spec.upsample_mode == "nearest" else 3, 1,
-                    lambda xb: self._upsample(xb, p, mc, spec),
+                    3 if up_conv else 1, 1,
+                    lambda xb: self._upsample(xb, p, mc, spec,
+                                              decomposed=up_conv),
                     out_scale=2,
                 )
             else:
@@ -369,9 +398,18 @@ class FCNEngine:
             # write back to the data pool in storage precision (FP16 in the
             # paper; f32 for the reference numerics)
             y = y.astype(self.storage_dtype)
-            arena[mc.out_addr] = y
-            h, w, c = prog.addr_shapes[mc.out_addr]
-            extents[mc.out_addr] = h * w * c * STORAGE_BYTES
+            if wp is None or wp.store:
+                arena[mc.out_addr] = y
+                h, w, c = prog.addr_shapes[mc.out_addr]
+                extents[mc.out_addr] = h * w * c * STORAGE_BYTES
+            if wp is not None:
+                # drop buffers at their last use so the trace holds no
+                # reference past the plan's liveness range
+                for a in wp.free_after:
+                    arena.pop(a, None)
+                    extents.pop(a, None)
+                if wp.drop_cache:
+                    cache = None
 
         return {k: arena[a] for k, a in prog.outputs.items()}
 

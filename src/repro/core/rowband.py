@@ -150,7 +150,8 @@ def program_halo_rows(program) -> int:
     return int(np.ceil(max(info[a][1] for a in out_addrs)))
 
 
-def program_band_costs(program, *, dtype_bytes: int = 4) -> dict:
+def program_band_costs(program, *, dtype_bytes: int = 4,
+                       mode: str = "optimized") -> dict:
     """Per-image cost features of running an assembled program row-banded
     over a device mesh — the inputs to the serving cost model
     (runtime/planner.py):
@@ -167,9 +168,20 @@ def program_band_costs(program, *, dtype_bytes: int = 4) -> dict:
       ``halo_layers`` how many layers exchange at all (each one is a
                      ppermute pair on the wire).
 
+    ``mode`` matches FCNEngine's execution mode and only changes the
+    upsample term: "optimized" runs the phase-decomposed 9-tap fused
+    path (fuse.upsample2x_conv3x3_fused — one 3x3 MAC per *input*
+    position, a 4x reduction), "reference" runs the naive
+    upsample-then-conv path (one 3x3 MAC per *output* position).  The
+    cost model must count what actually executes or banded/grid routing
+    overweights upsample-heavy heads by 4x on those words.
+
     Pure microcode-shape arithmetic: no params, no device work.
     """
     from .microcode import ExtOp, LayerType
+
+    if mode not in ("reference", "optimized"):
+        raise ValueError(mode)
 
     flops = 0.0
     halo_bytes = 0.0
@@ -187,7 +199,8 @@ def program_band_costs(program, *, dtype_bytes: int = 4) -> dict:
         elif lt == LayerType.UPSAMPLE:
             k, s = (1 if spec.upsample_mode == "nearest" else 3), 1
             if spec.upsample_mode != "nearest":
-                flops += 2.0 * k * k * mc.in_ch * oc * (oh // 2) * (ow // 2)
+                pos = (oh // 2) * (ow // 2) if mode == "optimized" else oh * ow
+                flops += 2.0 * k * k * mc.in_ch * oc * pos
         else:
             if ExtOp(mc.ext_opcode) != ExtOp.NONE:
                 flops += float(oh * ow * oc)

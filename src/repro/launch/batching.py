@@ -156,11 +156,21 @@ def round_batch(n: int, max_batch: int, mode: str = "pow2") -> int:
 
 class LRUCache:
     """Tiny LRU for compiled engines: key -> value, least-recently-used
-    eviction at ``capacity`` (0 or negative = unbounded)."""
+    eviction at ``capacity`` (0 or negative = unbounded).
 
-    def __init__(self, capacity: int = 8):
+    ``byte_budget`` adds a second, byte-weighted eviction rule: callers
+    that know an entry's footprint pass ``put(key, value, weight=bytes)``
+    and the cache also evicts LRU-first while the summed weights exceed
+    the budget (0 = no byte rule).  The most-recent entry always stays —
+    a single engine over budget must still be usable.  Entries stored
+    without a weight count 0 bytes (capacity still bounds them).
+    """
+
+    def __init__(self, capacity: int = 8, *, byte_budget: int = 0):
         self.capacity = capacity
+        self.byte_budget = byte_budget
         self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._w: Dict[Hashable, int] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -174,12 +184,24 @@ class LRUCache:
             self.misses += 1
             return None
 
-    def put(self, key: Hashable, value: Any) -> None:
+    def put(self, key: Hashable, value: Any, *, weight: int = 0) -> None:
         with self._lock:
             self._d[key] = value
             self._d.move_to_end(key)
+            self._w[key] = int(weight)
             while self.capacity > 0 and len(self._d) > self.capacity:
-                self._d.popitem(last=False)
+                k, _ = self._d.popitem(last=False)
+                self._w.pop(k, None)
+            while (self.byte_budget > 0 and len(self._d) > 1
+                   and sum(self._w.values()) > self.byte_budget):
+                k, _ = self._d.popitem(last=False)
+                self._w.pop(k, None)
+
+    @property
+    def weight_bytes(self) -> int:
+        """Summed weights of resident entries."""
+        with self._lock:
+            return sum(self._w.values())
 
     def __len__(self) -> int:
         return len(self._d)
@@ -228,6 +250,7 @@ class MicroBatcher:
         inflight: int = 1,
         clock: Callable[[], float] = time.perf_counter,
         book: Optional[Any] = None,
+        max_batch_for: Optional[Callable[[Hashable], int]] = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -239,6 +262,12 @@ class MicroBatcher:
         self.post_fn = post_fn
         self.finalize_fn = finalize_fn
         self.max_batch = max_batch
+        # optional per-bucket batch cap (memory-aware batching): the
+        # scheduler flushes bucket ``key`` at min(max_batch,
+        # max_batch_for(key)).  The callable must be cheap — it runs
+        # under the scheduler condition lock (cache inside, as
+        # STDService._bucket_cap does).
+        self.max_batch_for = max_batch_for
         self.max_wait_s = max_wait_ms / 1e3
         self.queue_depth = queue_depth
         self.post_workers = post_workers
@@ -420,6 +449,19 @@ class MicroBatcher:
         return fut
 
     # -- scheduler thread ------------------------------------------------------
+    def _cap(self, key: Hashable) -> int:
+        """Effective flush size for one bucket.  When a per-bucket cap
+        is wired (memory-aware batching) it REPLACES the fixed
+        max_batch — a memory-light bucket may batch above it, a
+        memory-heavy one is held below; <=0 falls back to max_batch."""
+        if self.max_batch_for is None:
+            return self.max_batch
+        try:
+            cap = int(self.max_batch_for(key))
+        except Exception:
+            return self.max_batch
+        return cap if cap > 0 else self.max_batch
+
     def _next_batch(self):
         """Block until a bucket is ready; None once stopped AND drained.
 
@@ -438,7 +480,7 @@ class MicroBatcher:
                     if not dq:
                         continue
                     head_t = dq[0].t_submit
-                    if len(dq) >= self.max_batch:
+                    if len(dq) >= self._cap(k):
                         r = "full"
                     elif self._stop:
                         r = "drain"
@@ -452,7 +494,7 @@ class MicroBatcher:
                         ready_key, reason, oldest_head = k, r, head_t
                 if ready_key is not None:
                     dq = self._pending[ready_key]
-                    n = min(len(dq), self.max_batch)
+                    n = min(len(dq), self._cap(ready_key))
                     items = [dq.popleft() for _ in range(n)]
                     self._n_pending -= n
                     self._cond.notify_all()      # wake blocked submitters

@@ -4,11 +4,16 @@
 traffic — we parse the optimized HLO and sum operand sizes of every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
 op (per-device bytes, since SPMD HLO shapes are per-device).
+
+:func:`memory_stats` / :func:`lowered_memory` read the backend's buffer
+assignment off a compiled executable (``memory_analysis()``) — the
+ground truth the memplan peak-bytes prediction and the serve_bench
+--memplan A/B are judged against.
 """
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -61,6 +66,49 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         out["count"] += 1
     out["total"] = sum(out[k] for k in _COLLECTIVES)
     return out
+
+
+def memory_stats(compiled: Any) -> Optional[Dict[str, int]]:
+    """Buffer-assignment sizes of a compiled executable, or None when
+    the backend exposes no ``memory_analysis()`` (older jaxlibs, some
+    plugin backends).  ``temp_bytes`` is the scratch the program needs
+    beyond arguments/outputs — the number liveness planning moves;
+    ``peak_bytes`` approximates total residency while a step runs."""
+    analysis_fn = getattr(compiled, "memory_analysis", None)
+    if analysis_fn is None:
+        return None
+    try:
+        mem = analysis_fn()
+    except Exception:
+        return None
+    if mem is None:
+        return None
+
+    def _get(name: str) -> int:
+        return int(getattr(mem, name, 0) or 0)
+
+    temp = _get("temp_size_in_bytes")
+    args = _get("argument_size_in_bytes")
+    outs = _get("output_size_in_bytes")
+    return {
+        "temp_bytes": temp,
+        "argument_bytes": args,
+        "output_bytes": outs,
+        "generated_code_bytes": _get("generated_code_size_in_bytes"),
+        "peak_bytes": temp + args + outs,
+    }
+
+
+def lowered_memory(fn: Any, *args: Any) -> Optional[Dict[str, int]]:
+    """AOT-lower ``fn`` (a jax.jit callable) at ``args`` (concrete
+    arrays or ShapeDtypeStructs), compile, and return
+    :func:`memory_stats` — one explicit compile, separate from any
+    call-path jit cache."""
+    try:
+        compiled = fn.lower(*args).compile()
+    except Exception:
+        return None
+    return memory_stats(compiled)
 
 
 def op_histogram(hlo_text: str, top: int = 15) -> List[Tuple[str, int]]:

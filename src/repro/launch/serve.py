@@ -125,7 +125,10 @@ class STDService:
                  precision: str = "f32",
                  postprocess: str = "host",
                  boxes_capacity: int = 256,
-                 model: str = "pixellink"):
+                 model: str = "pixellink",
+                 memplan: bool = True,
+                 activation_budget_bytes: Optional[int] = None,
+                 engine_cache_bytes: int = 0):
         from repro.models.fcn.heads import (
             DetectionModel, build_head, check_model,
         )
@@ -175,6 +178,15 @@ class STDService:
             )
         self.buckets = buckets
         self.max_batch = max_batch
+        self._batch_multiple = m
+        # memory-aware batching (core.memplan): with a budget configured,
+        # each bucket's flush size is capped by how many planned
+        # activation footprints fit — a memory-heavy bucket compiles its
+        # engines at a SMALLER batch (lower temp bytes), a light bucket
+        # may batch above the fixed max_batch.  None = fixed max_batch.
+        self.memplan_enabled = bool(memplan)
+        self.activation_budget_bytes = activation_budget_bytes
+        self._bucket_caps: Dict[Tuple[int, int], int] = {}
         self.max_wait_ms = max_wait_ms
         self.batch_round = batch_round
         self.tall_plan = tall_plan
@@ -210,6 +222,7 @@ class STDService:
                 bfp=BFPConfig() if bfp else None,
                 storage_fp16=bfp,
                 use_pallas=bfp and jax.default_backend() in ("gpu", "tpu"),
+                memplan=memplan,
             ), build_head(model, score_thr=score_thr,
                           link_thr=link_thr))
 
@@ -218,6 +231,7 @@ class STDService:
             score_thr=score_thr, link_thr=link_thr,
             capacity=engine_cache_capacity,
             book=self.book,
+            engine_bytes_budget=engine_cache_bytes,
         )
         if planner is not None:
             planner.bind_features(self._plan_features,
@@ -249,7 +263,31 @@ class STDService:
             model.program,
             self.factory.deepest_stride(tuple(hw), self.precision,
                                         self.model_name),
+            mode=self._mode,
         )
+
+    def _bucket_cap(self, hw: Tuple[int, int]) -> int:
+        """Effective max batch for one bucket.  With an activation
+        budget configured, the cap is how many planned per-image
+        footprints (core.memplan peak bytes) fit, rounded to the plan
+        batch multiple; without one it is the fixed max_batch.  Cached —
+        MicroBatcher calls this under its scheduler lock."""
+        if self.activation_budget_bytes is None or not self.memplan_enabled:
+            return self.max_batch
+        hw = tuple(hw)
+        cap = self._bucket_caps.get(hw)
+        if cap is None:
+            from repro.core.memplan import admissible_batch
+
+            try:
+                per_image = self.factory.memplan(
+                    hw, self.precision, self.model_name).peak_bytes
+            except Exception:
+                per_image = 0            # plan failure must not stop serving
+            cap = admissible_batch(per_image, self.activation_budget_bytes,
+                                   multiple=self._batch_multiple)
+            self._bucket_caps[hw] = cap
+        return cap
 
     def _plan_for(self, hw: Tuple[int, int], batch: int = 1) -> ExecutionPlan:
         """Plan routing.  With a cost-model planner configured, every
@@ -330,7 +368,7 @@ class STDService:
         dispatch chain."""
         hw = tuple(stack.shape[1:3])
         n_live = len(valid_hws)
-        b = round_batch(n_live, self.max_batch, self.batch_round)
+        b = round_batch(n_live, self._bucket_cap(hw), self.batch_round)
         plan = self._plan_for(hw, b)
         m = plan_batch_multiple(plan)            # data-parallel divisibility
         b = -(-b // m) * m
@@ -515,8 +553,41 @@ class STDService:
             mb_snap = batcher.stats_snapshot()
         for k, v in (mb_snap or {}).items():
             out[f"std_mb_{k}"] = float(v)
+        # per-(bucket,batch,plan,model) engine memory gauges — planned
+        # peak always; measured temp/peak for shapes a bench ran
+        # measure_engine_memory() on (launch/hlo_analysis buffer sizes)
+        for row in list(self.factory.stats.get("engine_memory", [])):
+            lbl = (f'bucket="{row["hw"][0]}x{row["hw"][1]}",'
+                   f'batch="{row["batch"]}",plan="{row["plan"]}",'
+                   f'model="{row["model"]}"')
+            out[f"std_engine_planned_peak_bytes{{{lbl}}}"] = float(
+                row.get("planned_peak_bytes", 0))
+            if "temp_bytes" in row:
+                out[f"std_engine_temp_bytes{{{lbl}}}"] = float(
+                    row["temp_bytes"])
+            if "peak_bytes" in row:
+                out[f"std_engine_peak_bytes{{{lbl}}}"] = float(
+                    row["peak_bytes"])
+        for hw, cap in sorted(self._bucket_caps.items()):
+            out[f'std_bucket_batch_cap{{bucket="{hw[0]}x{hw[1]}"}}'] = \
+                float(cap)
         out.update(self.book.snapshot())
         return out
+
+    def measure_engine_memory(self, hw: Tuple[int, int],
+                              batch: Optional[int] = None) -> Dict[str, Any]:
+        """AOT-measure one bucket engine's buffer assignment at ``batch``
+        (default: this bucket's effective cap) under the plan routing
+        would pick — results land in ``stats["engine_memory"]`` and the
+        ``std_engine_*_bytes`` gauges.  Explicit opt-in: one extra
+        compile per shape."""
+        hw = tuple(hw)
+        b = int(batch) if batch is not None else self._bucket_cap(hw)
+        m = self._batch_multiple
+        b = -(-b // m) * m
+        plan = self._plan_for(hw, b)
+        return self.factory.measure_engine_memory(
+            hw, b, plan, self.precision, self.model_name)
 
     def metrics_prometheus(self) -> str:
         """:meth:`metrics_snapshot` in Prometheus text-exposition form."""
@@ -595,6 +666,9 @@ class STDService:
                 max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
                 max_pending=self.max_pending, admission=self.admission,
                 inflight=self.inflight, book=self.book,
+                max_batch_for=(self._bucket_cap
+                               if self.activation_budget_bytes is not None
+                               else None),
             )
             self._batcher.start()
         return self

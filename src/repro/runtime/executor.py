@@ -275,6 +275,7 @@ class EngineFactory:
         capacity: int = 16,
         book: Any = None,
         cc_pallas: Any = None,
+        engine_bytes_budget: int = 0,
     ):
         self.make_model = make_model
         # make_model generations: legacy (hw), precision-aware
@@ -303,9 +304,16 @@ class EngineFactory:
         # so unbounded dicts would leak a parameter tree per shape
         self._models = LRUCache(capacity)
         self._params = LRUCache(capacity)
-        self._engines = LRUCache(capacity)
+        # the engine LRU can evict by planned activation bytes instead of
+        # (only) entry count: plan_fn puts each engine with
+        # weight = memplan peak bytes x batch, so a byte budget keeps the
+        # RESIDENT FOOTPRINT bounded rather than the engine count —
+        # engine_bytes_budget=0 keeps the pure count rule
+        self._engines = LRUCache(capacity, byte_budget=engine_bytes_budget)
+        self._memplans = LRUCache(capacity)
         self._lock = threading.Lock()
-        self.stats: Dict[str, Any] = {"compiled": []}
+        self.stats: Dict[str, Any] = {"compiled": [], "engine_memory": []}
+        self._mem_measured: Dict[Any, Dict[str, Any]] = {}
 
     def _build_model(self, hw: Tuple[int, int], precision: str, model: str):
         if self._make_model_arity < 3 and model != DEFAULT_MODEL:
@@ -361,6 +369,69 @@ class EngineFactory:
                 self._params.put((hw, precision, model), p)
             return p
 
+    def memplan(self, hw: Tuple[int, int], precision: str = "f32",
+                model: str = DEFAULT_MODEL):
+        """The static memory plan (core.memplan.MemPlan) of the program
+        assembled at ``hw`` — cached per (hw, precision, model).  Byte
+        accounting follows the precision's compute dtype: f32 activations
+        are 4 bytes, bfp serving stores fp16 between layers (2)."""
+        from repro.core.memplan import plan_program
+
+        hw = tuple(hw)
+        check_precision(precision)
+        check_model(model)
+        key = (hw, precision, model)
+        plan = self._memplans.get(key)
+        if plan is None:
+            prog = self.model(hw, precision, model).program
+            plan = plan_program(
+                prog, dtype_bytes=2 if precision == "bfp" else 4
+            )
+            self._memplans.put(key, plan)
+        return plan
+
+    def engine_weight_bytes(self, hw: Tuple[int, int], batch: int,
+                            precision: str = "f32",
+                            model: str = DEFAULT_MODEL) -> int:
+        """Planned activation footprint of one compiled engine — the
+        byte weight its LRU entry carries."""
+        return int(self.memplan(hw, precision, model).peak_bytes) * int(batch)
+
+    def measure_engine_memory(self, hw: Tuple[int, int], batch: int,
+                              plan: "ExecutionPlan", precision: str = "f32",
+                              model: str = DEFAULT_MODEL) -> Dict[str, Any]:
+        """AOT-compile one engine shape and read the backend's buffer
+        assignment (launch/hlo_analysis.lowered_memory): temp / argument
+        / output bytes.  Explicit opt-in — it compiles outside the
+        serving engine cache, so a bench calling it pays one extra
+        compile per shape.  Results are memoized and appended to
+        ``stats["engine_memory"]`` (the metrics_snapshot gauge source)."""
+        from repro.launch.hlo_analysis import lowered_memory
+
+        hw = tuple(hw)
+        key = (hw, int(batch), plan, precision, model)
+        got = self._mem_measured.get(key)
+        if got is not None:
+            return got
+        model_obj = self.model(hw, precision, model)
+        params = self.params(hw, precision, model)
+        c0 = model_obj.program.input_shape_chw[0]
+        x_sds = jax.ShapeDtypeStruct((int(batch), hw[0], hw[1], c0),
+                                     jnp.float32)
+        vq_sds = jax.ShapeDtypeStruct((int(batch), 2), jnp.int32)
+        raw = self._compile(hw, int(batch), plan, precision, model)
+        stats = lowered_memory(raw, params, x_sds, vq_sds)
+        row = {
+            "hw": hw, "batch": int(batch), "plan": describe_plan(plan),
+            "precision": precision, "model": model,
+            "planned_peak_bytes": self.engine_weight_bytes(
+                hw, batch, precision, model),
+            **(stats or {}),
+        }
+        self._mem_measured[key] = row
+        self.stats.setdefault("engine_memory", []).append(row)
+        return row
+
     def deepest_stride(self, hw: Tuple[int, int], precision: str = "f32",
                        model: str = DEFAULT_MODEL) -> int:
         """Deepest cumulative stride of the program assembled at ``hw``
@@ -390,7 +461,11 @@ class EngineFactory:
              "plan": describe_plan(plan), "precision": precision,
              "model": model}
         )
-        self._engines.put(key, fn)
+        try:
+            weight = self.engine_weight_bytes(hw, batch, precision, model)
+        except Exception:
+            weight = 0          # planning must never block serving
+        self._engines.put(key, fn, weight=weight)
         return fn
 
     def _timed(self, fn: Callable, hw, batch: int, kind: str,

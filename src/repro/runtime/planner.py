@@ -55,7 +55,12 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple
 
 from jax.sharding import Mesh
 
-from repro.launch.mesh import ICI_BW_PER_LINK, N_ICI_LINKS, PEAK_FLOPS_BF16
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    N_ICI_LINKS,
+    PEAK_FLOPS_BF16,
+)
 from repro.runtime.executor import (
     DEFAULT_MODEL,
     DataParallel,
@@ -79,18 +84,27 @@ class PlanFeatures:
     deepest_stride: int = 32     # cumulative stride of the deepest layer
     halo_layers: int = 0         # spatial layers that halo-exchange
                                  # (one ppermute pair each per step)
+    act_bytes: float = 0.0       # planned peak activation bytes per image
+                                 # (core.memplan drop-at-last-use peak);
+                                 # 0 = unknown, the memory term vanishes
 
 
 def features_for_program(program, deepest_stride: int,
-                         *, dtype_bytes: int = 4) -> PlanFeatures:
+                         *, dtype_bytes: int = 4,
+                         mode: str = "optimized") -> PlanFeatures:
     """PlanFeatures from an assembled microcode program (shape walk,
-    no device work)."""
+    no device work).  ``mode`` must match the engine's execution mode so
+    the upsample FLOPs count the path that actually runs (9-tap fused in
+    "optimized", naive in "reference" — core.rowband)."""
+    from repro.core.memplan import plan_program
     from repro.core.rowband import program_band_costs
 
-    c = program_band_costs(program, dtype_bytes=dtype_bytes)
+    c = program_band_costs(program, dtype_bytes=dtype_bytes, mode=mode)
+    plan = plan_program(program, dtype_bytes=dtype_bytes)
     return PlanFeatures(flops=c["flops"], halo_bytes=c["halo_bytes"],
                         deepest_stride=deepest_stride,
-                        halo_layers=c["halo_layers"])
+                        halo_layers=c["halo_layers"],
+                        act_bytes=float(plan.peak_bytes))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +119,9 @@ class CostParams:
     collective_overhead_s: float = 20e-6    # extra per sharded mesh axis
     halo_launch_s: float = 2e-6             # per halo-exchanging layer
                                             # (ppermute pair launch)
+    hbm_bw: float = HBM_BW                  # activation traffic bandwidth
+                                            # (memory term; act_bytes=0
+                                            # features pay nothing)
 
 
 def padded_batch(batch: int, data_n: int) -> int:
@@ -125,6 +142,11 @@ def step_cost(features: PlanFeatures, kind: str, batch: int, *,
     mn = model_n if kind in _BANDED else 1
     local_b = padded_batch(batch, dn) // dn   # occupancy: padding runs too
     compute = features.flops * local_b / (mn * params.peak_flops)
+    # memory term: the planned peak activation bytes stream through HBM
+    # at least once per step (row-banding divides the plane, so a band
+    # holds 1/mn of the footprint); small next to compute on these FCNs
+    # but it keeps memory-heavy buckets honest in the ordering
+    compute += features.act_bytes * local_b / (mn * params.hbm_bw)
     # wire bytes plus one ppermute-pair launch per halo-exchanging layer
     # — dozens of per-layer collectives per banded step, not one
     halo = ((features.halo_bytes * local_b / params.ici_bw

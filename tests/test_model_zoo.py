@@ -47,6 +47,20 @@ def golden_path(name: str) -> str:
     return os.path.join(GOLDEN_DIR, f"microcode_{name}.txt")
 
 
+def golden_memplan_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"microcode_{name}_memplan.txt")
+
+
+def golden_memplan_text(name: str) -> str:
+    """Memplan-optimized disassembly + plan annotations for one zoo
+    model (core.memplan.plan_disassembly over the canonical golden
+    build) — the snapshot that freezes the planner's schedule, slot
+    assignment, free-after sets, and fusion facts per head."""
+    from repro.core.memplan import plan_disassembly
+
+    return plan_disassembly(golden_model(name).program) + "\n"
+
+
 def _zoo_factory(capacity: int = 8) -> EngineFactory:
     return EngineFactory(
         lambda hw, precision="f32", model=DEFAULT_MODEL:
@@ -107,6 +121,62 @@ class TestGoldenMicrocode:
         a = golden_model(name).program.disassemble()
         b = golden_model(name).program.disassemble()
         assert a == b
+
+    @pytest.mark.parametrize("name", sorted(MODEL_ZOO))
+    def test_memplan_disassembly_matches_golden(self, name):
+        """Byte-stable memory plan per model: schedule, arena slots,
+        free-after sets, and fusion facts.  A planner or assembler
+        change that moves any of them fails here with a diff; if
+        intentional, regenerate with scripts/regen_golden_models.py."""
+        with open(golden_memplan_path(name)) as f:
+            assert f.read() == golden_memplan_text(name), (
+                f"memory-plan drift for {name!r}; if intentional run "
+                "scripts/regen_golden_models.py"
+            )
+
+    @pytest.mark.parametrize("name", sorted(MODEL_ZOO))
+    def test_memplan_is_deterministic(self, name):
+        assert golden_memplan_text(name) == golden_memplan_text(name)
+
+
+class TestMemplanBoxParity:
+    @pytest.mark.parametrize("name", sorted(MODEL_ZOO))
+    @pytest.mark.parametrize("hw", [(64, 64), (96, 96)])
+    def test_planned_engine_boxes_identical(self, name, hw):
+        """Property over the bucket grid: the memplan-scheduled engine
+        (fusion facts from the plan, buffers dropped at last use) and
+        the unplanned engine must be BOX-IDENTICAL — same weights, same
+        maps, same reference decode.  Maps are compared bitwise: the
+        plan may only reorder bookkeeping, never arithmetic."""
+        builds = {}
+        for on in (False, True):
+            m = DetectionModel(
+                STDConfig(name=f"{name}_vgg16", backbone="vgg16",
+                          width=0.125, image_size=hw,
+                          merge_ch=(16, 16, 8), mode="optimized",
+                          storage_fp16=False, memplan=on),
+                build_head(name),
+            )
+            params = m.init_params(jax.random.PRNGKey(0))
+            x = jax.random.uniform(jax.random.PRNGKey(5), (1, *hw, 3))
+            builds[on] = (m, m.apply(params, x))
+        m_on, maps_on = builds[True]
+        m_off, maps_off = builds[False]
+        assert m_on.engine.memplan is not None
+        assert m_off.engine.memplan is None
+        for k in maps_off:
+            assert np.array_equal(np.asarray(maps_off[k]),
+                                  np.asarray(maps_on[k])), k
+        valid = (hw[0], hw[1] - 8)
+        boxes = {
+            on: sorted(b["box"] for b in m.head.reference_decode(
+                {k: np.asarray(v[0]) for k, v in maps.items()
+                 if k != "logits"},
+                valid,
+            ))
+            for on, (m, maps) in builds.items()
+        }
+        assert boxes[True] == boxes[False]
 
 
 class TestEngineLRUModelAxis:
